@@ -1,0 +1,56 @@
+"""Fig 10: ablation chain — speedup/energy/area vs GROW-like baseline.
+
+Incremental configurations (paper Section VI-C):
+  FV(m=1) -> FV(m=6) -> +DoubleVRF -> +VertexCut -> +Flexible k
+Reported as geometric means across the evaluation datasets, normalized to
+GROW-like with the same buffer capacity (2 KB / 256 B, m=6).
+"""
+
+from benchmarks.common import dataset_list, geomean, prepared_dataset
+from repro.sim import GROWConfig, HWConfig, simulate_flexvector, simulate_grow
+
+ABLATION = {
+    "fv_m1": dict(m=1, double_vrf=False, vrf_depth=16, vertex_cut=False,
+                  flexible_k=False),
+    "fv_m6": dict(m=6, double_vrf=False, vrf_depth=16, vertex_cut=False,
+                  flexible_k=False),
+    "double_vrf": dict(m=6, double_vrf=True, vrf_depth=16, vertex_cut=False,
+                       flexible_k=False),
+    "vertex_cut": dict(m=6, double_vrf=True, vrf_depth=12, vertex_cut=True,
+                       flexible_k=False, tau=6),
+    "flexible_k": dict(m=6, double_vrf=True, vrf_depth=12, vertex_cut=True,
+                       flexible_k=True, tau=6),
+}
+
+PAPER_SPEEDUP = {"fv_m1": 1.21, "fv_m6": 3.34, "double_vrf": 3.51,
+                 "vertex_cut": 3.52, "flexible_k": 3.78}
+PAPER_FINAL_ENERGY = 0.595  # -40.5%
+
+
+def run(csv=print, datasets=None):
+    datasets = datasets or dataset_list()
+    speed = {k: [] for k in ABLATION}
+    energy = {k: [] for k in ABLATION}
+    area = {k: [] for k in ABLATION}
+    for name in datasets:
+        padj, stats, fdim = prepared_dataset(name)
+        gl = simulate_grow(padj, fdim, GROWConfig(m=6), stats=stats)
+        for step, kw in ABLATION.items():
+            r = simulate_flexvector(padj, fdim, HWConfig(**kw), stats=stats)
+            speed[step].append(gl.cycles / r.cycles)
+            energy[step].append(r.energy_pj / gl.energy_pj)
+            area[step].append(r.area_um2 / gl.area_um2)
+    csv("step,speedup_geomean,energy_ratio,area_ratio,paper_speedup")
+    out = {}
+    for step in ABLATION:
+        s, e, a = geomean(speed[step]), geomean(energy[step]), geomean(area[step])
+        csv(f"fig10.{step},{s:.2f},{e:.3f},{a:.3f},{PAPER_SPEEDUP[step]:.2f}")
+        out[step] = {"speedup": s, "energy": e, "area": a}
+    csv(f"# final energy ratio {out['flexible_k']['energy']:.3f} "
+        f"(paper {PAPER_FINAL_ENERGY}); per-dataset speedups: "
+        + " ".join(f"{d}={v:.2f}" for d, v in zip(datasets, speed["flexible_k"])))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Fig 9: area breakdown of FlexVector at the default configuration."""
+
+from repro.sim import HWConfig, GROWConfig, flexvector_area, grow_area
+
+PAPER = {  # Fig 9 percentages
+    "dense_buffer": 0.280, "sparse_buffer": 0.161, "vrf": 0.157,
+    "mac_lanes": 0.058, "control": 0.163, "csr_decoder_dma": 0.180,
+}
+
+
+def run(csv=print):
+    area = flexvector_area(HWConfig())
+    bd = area.breakdown()
+    csv("component,ours_um2,ours_pct,paper_pct")
+    for k, v in area.components_um2.items():
+        csv(f"fig9.{k},{v:.0f},{bd[k]*100:.1f},{PAPER.get(k, 0)*100:.1f}")
+    csv(f"fig9.total,{area.total_um2:.0f},100.0,100.0  # paper: 39430")
+    gl = grow_area(GROWConfig())
+    csv(f"fig9.grow_like_total,{gl.total_um2:.0f},,  "
+        f"# FV/GL area ratio {area.total_um2/gl.total_um2:.3f} (paper 1.047)")
+    return {"total_um2": area.total_um2, "ratio_vs_grow": area.total_um2 / gl.total_um2}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Fig 12: GROW-like vs FlexVector across buffer sizes (multi-buffer m).
+
+Four metrics per dataset, m in {1, 6, 8, 2273}: latency, DRAM accesses,
+dense-row miss count (plus FV k=0 variant — the red triangles), energy.
+Buffer capacity scales as m x (2048/6) bytes, so m=6 is the paper's 2 KB
+default and m=2273 the 512 KB+ GROW-dagger configuration.
+"""
+
+from benchmarks.common import dataset_list, prepared_dataset
+from repro.sim import GROWConfig, HWConfig, simulate_flexvector, simulate_grow
+
+MS = [1, 6, 8, 2273]
+
+
+def cap_for(m: int) -> int:
+    return max(int(2048 * m / 6), 256)
+
+
+def run(csv=print, datasets=None):
+    datasets = datasets or dataset_list()
+    out = {}
+    csv("dataset,design,m,latency_cycles,dram_accesses,misses,misses_k0,"
+        "energy_pj")
+    for name in datasets:
+        padj, stats, fdim = prepared_dataset(name)
+        base_gl = None
+        for m in MS:
+            cap = cap_for(m)
+            gl = simulate_grow(
+                padj, fdim,
+                GROWConfig(dense_buffer_bytes=cap, m=m), stats=stats)
+            if base_gl is None:
+                base_gl = gl
+            fv = simulate_flexvector(
+                padj, fdim, HWConfig(dense_buffer_bytes=cap, m=m),
+                stats=stats)
+            fv_k0 = simulate_flexvector(
+                padj, fdim,
+                HWConfig(dense_buffer_bytes=cap, m=m, flexible_k=False,
+                         static_k=0),
+                stats=stats)
+            for tag, r in (("grow", gl), ("flexvector", fv)):
+                k0 = fv_k0.vrf_or_cache_misses if tag == "flexvector" else ""
+                csv(f"fig12.{name},{tag},{m},{r.cycles:.4e},"
+                    f"{r.dram_accesses:.4e},{r.vrf_or_cache_misses:.4e},"
+                    f"{k0 and f'{k0:.4e}'},{r.energy_pj:.4e}")
+            out[(name, m)] = {
+                "speedup": gl.cycles / fv.cycles,
+                "dram_ratio": gl.dram_accesses / fv.dram_accesses,
+                "miss_ratio_k0": (fv_k0.vrf_or_cache_misses
+                                  / max(fv.vrf_or_cache_misses, 1)),
+                "energy_ratio": fv.energy_pj / gl.energy_pj,
+            }
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Fig 11: Algorithm 2 (flexible k) vs best static k, CiteSeer.
+
+(a) the selected k varies across tiles and grows with VRF depth;
+(b/c) Algorithm 2's latency lands within ~2% of the best static k for
+single-VRF (D in {12,16,32}) and double-VRF (D in {6x2,8x2,16x2}).
+"""
+
+import numpy as np
+
+from benchmarks.common import prepared_dataset
+from repro.sim import HWConfig, simulate_flexvector
+
+SINGLE_DEPTHS = [12, 16, 32]
+DOUBLE_DEPTHS = [12, 16, 32]   # 6x2, 8x2, 16x2
+
+
+def run(csv=print, dataset: str = "citeseer"):
+    padj, stats, fdim = prepared_dataset(dataset)
+    out = {}
+    csv("mode,depth,alg2_cycles,best_static_k,best_static_cycles,gap_pct,k_hist")
+    for mode, depths in (("single", SINGLE_DEPTHS), ("double", DOUBLE_DEPTHS)):
+        for d in depths:
+            base = dict(vrf_depth=d, double_vrf=(mode == "double"), tau=6)
+            flex = simulate_flexvector(
+                padj, fdim, HWConfig(flexible_k=True, **base), stats=stats)
+            ks = flex.per_block_k
+            hist = np.bincount(ks, minlength=9)[:9]
+            best_k, best_cycles = None, None
+            for k in range(0, min(d, 14) + 1):
+                r = simulate_flexvector(
+                    padj, fdim,
+                    HWConfig(flexible_k=False, static_k=k, **base),
+                    stats=stats)
+                if best_cycles is None or r.cycles < best_cycles:
+                    best_k, best_cycles = k, r.cycles
+            gap = (flex.cycles - best_cycles) / best_cycles * 100
+            csv(f"fig11.{mode},{d},{flex.cycles:.3e},{best_k},"
+                f"{best_cycles:.3e},{gap:+.2f},{'|'.join(map(str, hist))}")
+            out[(mode, d)] = {"gap_pct": gap, "best_k": best_k,
+                              "mean_k": float(ks.mean())}
+    return out
+
+
+if __name__ == "__main__":
+    run()

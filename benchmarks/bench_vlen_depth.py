@@ -1,0 +1,63 @@
+"""Fig 13: VLEN (64-2048 bit) and VRF depth (6x2..32x2) PPA sweep.
+
+Within-group: wider VLEN -> more lanes + wider f_tile -> fewer passes and
+fewer coarse instructions, saturating once DRAM-bound; area grows with
+lanes + Dense Buffer width.  Cross-group: deeper VRFs host larger fixed
+regions -> fewer misses.  Tile sizes follow the paper: 32x32 for
+D <= 16x2, 64x64 for 32x2.
+"""
+
+import numpy as np
+
+from benchmarks.common import geomean, prepared_dataset
+from repro.core.sparse_formats import CSRMatrix
+from repro.sim import HWConfig, compute_block_stats, simulate_flexvector
+
+VLENS = [64, 128, 512, 1024, 2048]
+DEPTHS = [12, 16, 32, 64]          # 6x2, 8x2, 16x2, 32x2
+
+
+def run(csv=print, datasets=None):
+    datasets = datasets or ["cora", "citeseer", "pubmed"]
+    # tile follows depth (paper: 32x32 up to 16x2, 64x64 at 32x2)
+    stats_cache = {}
+    out = {}
+    csv("depth,vlen,speedup_vs_base,instr_ratio,energy_ratio,area_ratio")
+    base = {}
+    for depth in DEPTHS:
+        tile = 64 if depth >= 64 else 32
+        tau = depth // 2
+        for vlen in VLENS:
+            cyc, ins, en, ar = [], [], [], []
+            for name in datasets:
+                padj, _, fdim = prepared_dataset(name)
+                key = (name, tile)
+                if key not in stats_cache:
+                    stats_cache[key] = compute_block_stats(padj, tile)
+                hw = HWConfig(
+                    vlen_bits=vlen,
+                    vrf_depth=depth,
+                    tau=tau,
+                    tile=tile,
+                    dense_buffer_bytes=2048 * vlen // 128,
+                )
+                r = simulate_flexvector(padj, fdim, hw,
+                                        stats=stats_cache[key])
+                cyc.append(r.cycles)
+                ins.append(r.instr_count)
+                en.append(r.energy_pj)
+                ar.append(r.area_um2)
+            row = (geomean(cyc), geomean(ins), geomean(en), geomean(ar))
+            if not base:
+                base = {"cyc": row[0], "ins": row[1], "en": row[2],
+                        "ar": row[3]}
+            csv(f"fig13.D{depth},{vlen},{base['cyc']/row[0]:.2f},"
+                f"{row[1]/base['ins']:.3f},{row[2]/base['en']:.3f},"
+                f"{row[3]/base['ar']:.2f}")
+            out[(depth, vlen)] = {"speedup": base["cyc"] / row[0],
+                                  "instr_ratio": row[1] / base["ins"]}
+    return out
+
+
+if __name__ == "__main__":
+    run()

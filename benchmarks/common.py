@@ -1,0 +1,63 @@
+"""Shared helpers for the paper-reproduction benchmarks.
+
+Loads a dataset, applies the edge-cut permutation (greedy BFS clustering,
+the METIS stand-in — DESIGN.md §5.2), and caches the permuted adjacency +
+BlockStats to disk so figure benchmarks don't redo the O(nnz log nnz)
+preprocessing of Reddit/Yelp.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.preprocessing import apply_symmetric_permutation
+from repro.core.sparse_formats import CSRMatrix
+from repro.graphs import load_dataset
+from repro.graphs.partition import label_propagation_permutation
+from repro.sim import BlockStats, compute_block_stats
+
+CACHE_DIR = os.environ.get(
+    "REPRO_CACHE", os.path.join(os.path.dirname(__file__), "..", ".cache")
+)
+
+SMALL = ["cora", "citeseer", "pubmed"]
+ALL_FIVE = ["cora", "citeseer", "pubmed", "reddit", "yelp"]
+
+
+def geomean(xs) -> float:
+    xs = np.asarray(list(xs), dtype=np.float64)
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def prepared_dataset(
+    name: str, tile: int = 16, seed: int = 0
+) -> Tuple[CSRMatrix, BlockStats, int]:
+    """(permuted normalized adjacency, block stats, feature_dim), cached."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"{name}_t{tile}_s{seed}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            padj, stats, fdim = pickle.load(f)
+        return padj, stats, fdim
+    t0 = time.time()
+    ds = load_dataset(name, seed=seed, with_features=False)
+    perm = label_propagation_permutation(ds.adj_norm)
+    padj = apply_symmetric_permutation(ds.adj_norm, perm)
+    stats = compute_block_stats(padj, tile)
+    fdim = ds.spec.feature_dim
+    with open(path, "wb") as f:
+        pickle.dump((padj, stats, fdim), f, protocol=4)
+    print(f"[prep] {name}: tile={tile} nnz={padj.nnz} ({time.time() - t0:.1f}s)")
+    return padj, stats, fdim
+
+
+def dataset_list() -> List[str]:
+    names = os.environ.get("REPRO_DATASETS")
+    if names:
+        return names.split(",")
+    return ALL_FIVE

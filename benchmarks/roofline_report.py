@@ -1,0 +1,77 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun/*.json."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline.analysis import roofline_terms  # noqa: E402
+
+RESULT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+HBM_BYTES = 16e9  # v5e
+
+
+def load():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULT_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.1f}G"
+
+
+def dryrun_table(cells, mesh="2x16x16"):
+    print(f"\n### Dry-run ({mesh}, {'512' if mesh=='2x16x16' else '256'} chips)\n")
+    print("| arch | shape | status | compile s | HLO peak/dev | fits 16G? "
+          "| coll bytes/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for c in cells:
+        if c["mesh"] != mesh:
+            continue
+        if "skipped" in c:
+            print(f"| {c['arch']} | {c['shape']} | SKIP (full attention, "
+                  f"unbounded 512k cache) | — | — | — | — |")
+            continue
+        mem = c["memory_per_device"]["peak_bytes_est"]
+        coll = c["collectives"]["total"]
+        fits = "yes" if mem < HBM_BYTES else f"NO ({mem/1e9:.0f}G)"
+        print(f"| {c['arch']} | {c['shape']} | ok | {c['compile_s']} "
+              f"| {fmt_bytes(mem)} | {fits} | {fmt_bytes(coll)} |")
+
+
+def roofline_table(cells):
+    print("\n### Roofline (single pod, 16x16 = 256 chips)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| bound s | MODEL/HLO flops |")
+    print("|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if c["mesh"] != "16x16" or "skipped" in c:
+            continue
+        ca = c["cost_analysis"]
+        t = roofline_terms(
+            ca["flops_per_device"], ca["bytes_per_device"],
+            ca["collective_bytes_per_device"], c["chips"], c["model_flops"])
+        print(f"| {c['arch']} | {c['shape']} | {t.compute_s:.4f} "
+              f"| {t.memory_s:.4f} | {t.collective_s:.4f} | {t.dominant} "
+              f"| {t.bound():.4f} | {t.useful_flops_ratio:.2f} |")
+
+
+def main():
+    cells = load()
+    n_ok = sum(1 for c in cells if "skipped" not in c)
+    n_skip = sum(1 for c in cells if "skipped" in c)
+    print(f"cells: {len(cells)} ({n_ok} compiled, {n_skip} skipped by rule)")
+    roofline_table(cells)
+    dryrun_table(cells, "16x16")
+    dryrun_table(cells, "2x16x16")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark aggregator: one harness per paper table/figure.
+
+Emits CSV blocks per figure (Fig 9 area, Fig 10 ablation, Fig 11
+flexible-k, Fig 12 buffer sweep, Fig 13 VLEN/depth, kernel microbench).
+Dataset scope via REPRO_DATASETS (default: all five; set
+REPRO_DATASETS=cora,citeseer,pubmed for a quick pass).
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import (  # noqa: E402
+    bench_ablation,
+    bench_area,
+    bench_buffer_sizes,
+    bench_flexible_k,
+    bench_spmm_kernel,
+    bench_vlen_depth,
+)
+
+
+def main() -> None:
+    t0 = time.time()
+    print(f"# datasets: {os.environ.get('REPRO_DATASETS', 'all five')}")
+    for name, mod in [
+        ("Fig 9 (area)", bench_area),
+        ("Fig 10 (ablation)", bench_ablation),
+        ("Fig 11 (flexible k)", bench_flexible_k),
+        ("Fig 12 (buffer sizes)", bench_buffer_sizes),
+        ("Fig 13 (VLEN/depth)", bench_vlen_depth),
+        ("SpMM kernel", bench_spmm_kernel),
+    ]:
+        print(f"\n## {name}")
+        t = time.time()
+        mod.run()
+        print(f"# ({time.time() - t:.1f}s)")
+    print(f"\n# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

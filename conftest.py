@@ -1,0 +1,10 @@
+"""Ensure the repo root (for `benchmarks.*`) and src/ are importable when
+running `PYTHONPATH=src pytest tests/` from any directory."""
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

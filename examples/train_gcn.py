@@ -1,0 +1,112 @@
+"""End-to-end driver: train a 2-layer GCN with the fault-tolerant trainer.
+
+Exercises the full stack: dataset synthesis -> hybrid preprocessing ->
+FlexVector SpMM (differentiable reference path) -> AdamW -> async sharded
+checkpointing -> restart-on-failure (inject one with --inject-failure).
+
+Run:  PYTHONPATH=src python examples/train_gcn.py --steps 300
+"""
+
+import argparse
+import functools
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs import load_dataset
+from repro.models.gcn import (
+    GCNConfig,
+    GCNGraph,
+    gcn_accuracy,
+    gcn_loss,
+    init_params,
+)
+from repro.train import (
+    AdamWConfig,
+    StepFailure,
+    TrainerConfig,
+    adamw_init,
+    adamw_update,
+    run,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="cora")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=5e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_gcn_ckpt")
+    ap.add_argument("--inject-failure", action="store_true",
+                    help="simulate a node loss at step 40")
+    ap.add_argument("--fresh", action="store_true")
+    args = ap.parse_args()
+    if args.fresh:
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    ds = load_dataset(args.dataset)
+    cfg = GCNConfig(
+        in_dim=ds.spec.feature_dim,
+        hidden_dim=args.hidden,
+        out_dim=ds.spec.classes,
+    )
+    graph = GCNGraph.build(ds.adj_norm, cfg)
+    feats = jnp.asarray(ds.features)
+    # learnable labels: 2-hop aggregated feature signs (so the task is
+    # actually coupled to the graph structure, not noise)
+    a = ds.adj_norm.to_scipy()
+    sig = np.asarray(a @ (a @ ds.features[:, : cfg.out_dim]))
+    labels = jnp.asarray(np.argmax(sig, axis=1).astype(np.int32))
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=20)
+    state = {"params": params, "opt": adamw_init(params)}
+
+    @jax.jit
+    def step_fn_jit(state):
+        loss, grads = jax.value_and_grad(
+            lambda p: gcn_loss(p, graph, feats, labels, cfg)
+        )(state["params"])
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, state["opt"], state["params"]
+        )
+        return {"params": new_params, "opt": new_opt}, {"loss": loss, **metrics}
+
+    def step_fn(state, _batch):
+        new_state, metrics = step_fn_jit(state)
+        return new_state, {k: float(v) for k, v in metrics.items()}
+
+    def batches():
+        while True:
+            yield None
+
+    failure_hook = None
+    if args.inject_failure:
+        fired = {"done": False}
+
+        def failure_hook(step):
+            if step == 40 and not fired["done"]:
+                fired["done"] = True
+                raise StepFailure("injected node loss")
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=25,
+        log_every=25,
+    )
+    state, report = run(tcfg, state, step_fn, batches(),
+                        failure_hook=failure_hook)
+
+    acc = gcn_accuracy(state["params"], graph, feats, labels, cfg)
+    print(f"\ndone: steps={report.steps_done} restarts={report.restarts} "
+          f"stragglers={report.stragglers}")
+    print(f"final loss={report.losses[-1]:.4f}  train acc={float(acc):.3f}")
+    assert report.losses[-1] < report.losses[0], "loss must decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Architecture configs (assigned pool) + GCN dataset configs."""
+
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig, SSMConfig
+from repro.configs.registry import get_config, list_archs, reduced
+
+__all__ = [
+    "ArchConfig",
+    "MLAConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "get_config",
+    "list_archs",
+    "reduced",
+]

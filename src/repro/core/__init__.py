@@ -1,0 +1,83 @@
+"""FlexVector core: the paper's contribution as composable JAX modules.
+
+Pipeline: ``CSRMatrix`` -> hybrid preprocessing (edge-cut + Algorithm 1
+vertex-cut) -> ``TiledELL`` -> ``spmm_ell`` (reference or Pallas kernel),
+with Algorithm 2 flexible-k selection and the coarse-grained ISA lowering
+feeding the instruction-driven simulator in ``repro.sim``.
+"""
+
+from repro.core.sparse_formats import (
+    CSRMatrix,
+    TiledELL,
+    PAD_COL,
+    csr_to_ell,
+    csr_rows_to_ell,
+    ell_to_dense,
+    random_power_law_csr,
+)
+from repro.core.preprocessing import (
+    PreprocessResult,
+    Tile,
+    VertexCutTile,
+    edge_cut_permutation,
+    apply_symmetric_permutation,
+    partition_into_tiles,
+    vertex_cut_tile,
+    preprocess,
+    hot_column_permutation,
+)
+from repro.core.topk_select import (
+    select_top_k,
+    fixed_region_columns,
+    tile_miss_profile,
+)
+from repro.core.isa import (
+    Op,
+    Instr,
+    TileProgram,
+    build_tile_program,
+    build_programs,
+    expand_instructions,
+)
+from repro.core.dataflow import (
+    BufferPlan,
+    KernelGrid,
+    plan_buffer,
+    plan_kernel_grid,
+)
+from repro.core.spmm import spmm_ell, segment_accumulate, spmm_dense_oracle
+
+__all__ = [
+    "CSRMatrix",
+    "TiledELL",
+    "PAD_COL",
+    "csr_to_ell",
+    "csr_rows_to_ell",
+    "ell_to_dense",
+    "random_power_law_csr",
+    "PreprocessResult",
+    "Tile",
+    "VertexCutTile",
+    "edge_cut_permutation",
+    "apply_symmetric_permutation",
+    "partition_into_tiles",
+    "vertex_cut_tile",
+    "preprocess",
+    "hot_column_permutation",
+    "select_top_k",
+    "fixed_region_columns",
+    "tile_miss_profile",
+    "Op",
+    "Instr",
+    "TileProgram",
+    "build_tile_program",
+    "build_programs",
+    "expand_instructions",
+    "BufferPlan",
+    "KernelGrid",
+    "plan_buffer",
+    "plan_kernel_grid",
+    "spmm_ell",
+    "segment_accumulate",
+    "spmm_dense_oracle",
+]

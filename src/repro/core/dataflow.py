@@ -1,0 +1,138 @@
+"""Hierarchical dataflow planner (paper Section V).
+
+Two coordinated levels:
+
+* **DRAM -> buffer: inner-product (output-stationary).**  The output tile
+  stays resident in the Dense Buffer's Result region while partial products
+  accumulate through the Temp region; the feature dimension is cut into
+  f-tiles bounded by the buffer row width, and multi-buffering (factor m)
+  overlaps the next tile group's DRAM loads with the current compute.
+
+* **buffer -> VRF: row-wise product.**  Within a tile the sparse (sub-)rows
+  stream through CMP against dense rows resident in the flexible VRF.
+
+For the Pallas kernel the same plan materializes as the launch grid: the
+k-tile axis is innermost (output-stationary accumulation), the feature axis
+is outermost, and hot k-tiles lead so they stay VMEM-resident (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.sparse_formats import TiledELL, _ceil_div
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferPlan:
+    """DRAM–buffer level plan for the simulator."""
+
+    f_tile: int          # feature columns per pass (fits Dense Buffer width)
+    n_f_tiles: int
+    m: int               # multi-buffer factor (m=2 double buffer, paper m=6)
+    elem_bytes: int
+
+    @property
+    def overlapped(self) -> bool:
+        return self.m >= 2
+
+
+def plan_buffer(
+    feature_dim: int,
+    dense_buffer_bytes: int,
+    tile_rows: int,
+    m: int,
+    elem_bytes: int = 1,
+    rows_to_compute_frac: float = 0.5,
+) -> BufferPlan:
+    """Split the feature dimension so a tile group fits the Dense Buffer.
+
+    The buffer is logically split into Rows-to-Compute / Result / Temp
+    regions (Fig 4b); ``rows_to_compute_frac`` of the capacity feeds the
+    VRF, the rest holds the output and partial-sum tiles.
+    """
+    rtc_bytes = int(dense_buffer_bytes * rows_to_compute_frac)
+    per_buffer = max(rtc_bytes // max(m, 1), 1)
+    # One buffered unit holds `tile_rows` dense rows of f_tile columns.
+    f_tile = max(per_buffer // (tile_rows * elem_bytes), 1)
+    f_tile = min(f_tile, feature_dim)
+    return BufferPlan(
+        f_tile=f_tile,
+        n_f_tiles=_ceil_div(feature_dim, f_tile),
+        m=m,
+        elem_bytes=elem_bytes,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelGrid:
+    """Grid schedule for the Pallas kernel.
+
+    ``pairs`` enumerates the non-empty (row_block, k_tile) cells in
+    output-stationary order (all k-tiles of a row block consecutively,
+    hot k-tiles first); ``first_k`` flags the first visit of each row block
+    so the kernel zero-initializes its accumulator there.
+    """
+
+    block_rows: int
+    block_k: int
+    block_f: int
+    pairs: np.ndarray     # (n_steps, 2) int32 [row_block, k_tile]
+    first_k: np.ndarray   # (n_steps,) bool
+    n_row_blocks: int
+    n_k_tiles: int
+    n_f_tiles: int
+    density: float        # visited fraction of the dense grid
+
+
+def plan_kernel_grid(
+    ell: TiledELL,
+    feature_dim: int,
+    block_rows: int = 128,
+    block_k: int = 128,
+    block_f: int = 128,
+    skip_empty: bool = True,
+    hot_k_first: bool = True,
+) -> KernelGrid:
+    """Build the compacted launch schedule from the ELL block occupancy."""
+    occ = ell.block_occupancy(block_rows, block_k)
+    n_rb, n_kb = occ.shape
+    if not skip_empty:
+        occ = np.ones_like(occ)
+    # Order k-tiles within each row block: densest (hottest) first so the
+    # leading tiles are shared across row blocks and stay VMEM-resident.
+    if hot_k_first:
+        valid = ell.cols != -1
+        kb_of = np.where(valid, ell.cols // block_k, 0)
+        counts = np.bincount(kb_of[valid].ravel(), minlength=n_kb)
+        k_order = np.argsort(-counts, kind="stable")
+    else:
+        k_order = np.arange(n_kb)
+
+    pairs: List[Tuple[int, int]] = []
+    first: List[bool] = []
+    for rb in range(n_rb):
+        started = False
+        for kb in k_order:
+            if occ[rb, kb]:
+                pairs.append((rb, int(kb)))
+                first.append(not started)
+                started = True
+        if not started:  # keep every row block visited once to zero its out
+            pairs.append((rb, int(k_order[0]) if n_kb else 0))
+            first.append(True)
+    pairs_arr = np.asarray(pairs, dtype=np.int32).reshape(-1, 2)
+    return KernelGrid(
+        block_rows=block_rows,
+        block_k=block_k,
+        block_f=block_f,
+        pairs=pairs_arr,
+        first_k=np.asarray(first, dtype=bool),
+        n_row_blocks=n_rb,
+        n_k_tiles=n_kb,
+        n_f_tiles=_ceil_div(feature_dim, block_f),
+        density=float(len(pairs)) / float(max(n_rb * n_kb, 1)),
+    )

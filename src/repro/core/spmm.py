@@ -1,0 +1,100 @@
+"""High-level SpMM entry points (reference + kernel dispatch).
+
+``spmm_ell`` is the public API: given a preprocessed bounded-row sparse
+operand (:class:`TiledELL`) and a dense matrix, compute ``A @ D``.  The
+implementation can be the pure-jnp reference (always available, any backend)
+or the Pallas kernel (TPU target, validated in interpret mode on CPU).
+
+Sub-rows produced by the vertex-cut are summed back into their original
+output row (the paper's CMP partial-sum path) with a segment-sum.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_formats import PAD_COL, TiledELL
+
+
+@partial(jax.jit, static_argnames=("n_out_rows",))
+def _ell_matmul_ref(
+    cols: jax.Array,      # (R, tau) int32, PAD_COL padding
+    vals: jax.Array,      # (R, tau)
+    row_map: jax.Array,   # (R,) int32, -1 padding
+    dense: jax.Array,     # (K, F)
+    n_out_rows: int,
+) -> jax.Array:
+    """Pure-jnp row-wise product oracle.
+
+    out[row_map[i]] += sum_t vals[i, t] * dense[cols[i, t]]   (masked)
+    """
+    mask = (cols != PAD_COL)
+    safe_cols = jnp.where(mask, cols, 0)
+    gathered = dense[safe_cols]                          # (R, tau, F)
+    weighted = gathered * (vals * mask)[..., None]       # (R, tau, F)
+    per_sub_row = weighted.sum(axis=1)                   # (R, F)
+    safe_rows = jnp.where(row_map >= 0, row_map, n_out_rows)
+    out = jnp.zeros((n_out_rows + 1, dense.shape[1]), dense.dtype)
+    out = out.at[safe_rows].add(per_sub_row)
+    return out[:n_out_rows]
+
+
+def spmm_ell(
+    ell: TiledELL,
+    dense: jax.Array,
+    impl: str = "reference",
+    block_rows: int = 128,
+    block_k: int = 128,
+    block_f: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Compute ``A @ dense`` for a preprocessed bounded-row sparse ``A``.
+
+    impl:
+      * ``reference`` — pure jnp (XLA gather + segment add).
+      * ``pallas``    — FlexVector Pallas kernel (dense grid, masked).
+      * ``pallas_sparse`` — Pallas kernel with block-skipping grid
+        compaction (scalar-prefetch schedule).
+    """
+    cols = jnp.asarray(ell.cols)
+    vals = jnp.asarray(ell.vals, dtype=dense.dtype)
+    row_map = jnp.asarray(ell.row_map)
+    if impl == "reference":
+        return _ell_matmul_ref(cols, vals, row_map, dense, ell.n_orig_rows)
+    if impl in ("pallas", "pallas_sparse"):
+        from repro.kernels import ops  # deferred: keeps core importable alone
+
+        sub = ops.flexvector_spmm(
+            ell,
+            dense,
+            block_rows=block_rows,
+            block_k=block_k,
+            block_f=block_f,
+            skip_empty=(impl == "pallas_sparse"),
+            interpret=interpret,
+        )
+        return segment_accumulate(sub, row_map, ell.n_orig_rows)
+    raise ValueError(f"unknown impl: {impl}")
+
+
+@partial(jax.jit, static_argnames=("n_out_rows",))
+def segment_accumulate(
+    sub_rows: jax.Array, row_map: jax.Array, n_out_rows: int
+) -> jax.Array:
+    """Sum vertex-cut sub-row partials back into original output rows."""
+    safe = jnp.where(row_map >= 0, row_map, n_out_rows)
+    out = jnp.zeros((n_out_rows + 1, sub_rows.shape[1]), sub_rows.dtype)
+    out = out.at[safe].add(sub_rows)
+    return out[:n_out_rows]
+
+
+def spmm_dense_oracle(ell: TiledELL, dense: np.ndarray) -> np.ndarray:
+    """Numpy float64 oracle: densify A then matmul (tests only)."""
+    from repro.core.sparse_formats import ell_to_dense
+
+    return ell_to_dense(ell) @ dense.astype(np.float64)

@@ -1,0 +1,2 @@
+"""Synthetic data pipelines."""
+from repro.data.synthetic import token_batch, token_batches

@@ -1,0 +1,7 @@
+"""Graph data pipeline: dataset synthesis + partitioning."""
+
+from repro.graphs.datasets import DATASETS, DatasetSpec, load_dataset
+from repro.graphs.partition import cluster_greedy_bfs, label_propagation_permutation, edge_cut_quality
+
+__all__ = ["DATASETS", "DatasetSpec", "load_dataset", "cluster_greedy_bfs",
+           "label_propagation_permutation", "edge_cut_quality"]

@@ -1,0 +1,116 @@
+"""Graph partitioners for the inter-tile edge-cut (paper Section IV-A).
+
+METIS is unavailable offline; two stand-ins with the same objective
+(minimize cross-tile edges under a per-tile node budget):
+
+* RCM ordering + contiguous tiling (`repro.core.preprocessing`,
+  default) — scales to tens of millions of edges;
+* greedy BFS clustering (here) — grows clusters of ``tile`` nodes along
+  edges, closer in spirit to METIS for small graphs.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+from repro.core.sparse_formats import CSRMatrix
+
+
+def cluster_greedy_bfs(adj: CSRMatrix, tile: int, seed: int = 0) -> np.ndarray:
+    """Return a node permutation grouping BFS-grown clusters of <= tile nodes.
+
+    Seeds are picked by descending degree (supernodes anchor clusters, which
+    concentrates their edges inside a tile the way METIS keeps highly
+    connected vertices together).
+    """
+    n = adj.rows
+    deg = adj.row_nnz()
+    visited = np.zeros(n, dtype=bool)
+    order = []
+    seeds = np.argsort(-deg, kind="stable")
+    indptr, indices = adj.indptr, adj.indices
+    for s in seeds:
+        if visited[s]:
+            continue
+        # grow one cluster
+        cluster = []
+        q = deque([int(s)])
+        visited[s] = True
+        while q and len(cluster) < tile:
+            u = q.popleft()
+            cluster.append(u)
+            nbrs = indices[indptr[u] : indptr[u + 1]]
+            # highest-degree neighbours first: keep hubs together
+            for v in nbrs[np.argsort(-deg[nbrs], kind="stable")]:
+                if not visited[v]:
+                    visited[v] = True
+                    q.append(int(v))
+        # anything left in the queue seeds later clusters
+        for v in q:
+            visited[v] = False
+        order.extend(cluster)
+    return np.asarray(order, dtype=np.int64)
+
+
+def label_propagation_permutation(
+    adj: CSRMatrix, iters: int = 5, seed: int = 0
+) -> np.ndarray:
+    """Community detection by label propagation, fully vectorized.
+
+    Each iteration every node adopts the most frequent label among its
+    neighbours (ties -> smallest label).  Converges in a few iterations on
+    community-structured graphs and scales to tens of millions of edges
+    (two O(E log E) sorts per iteration).  The returned permutation orders
+    nodes by final community label (hubs of a community first), giving the
+    contiguous-tile locality METIS edge-cut partitioning would.
+    """
+    n = adj.rows
+    rnz = adj.row_nnz()
+    src = np.repeat(np.arange(n, dtype=np.int64), rnz)
+    dst = adj.indices.astype(np.int64)
+    labels = np.arange(n, dtype=np.int64)
+    for _ in range(iters):
+        lbl = labels[dst]
+        # count (src, lbl) pairs
+        key = src * n + lbl
+        order = np.argsort(key, kind="stable")
+        ks = key[order]
+        new_run = np.ones(len(ks), dtype=bool)
+        if len(ks):
+            new_run[1:] = ks[1:] != ks[:-1]
+        starts = np.flatnonzero(new_run)
+        counts = np.diff(np.append(starts, len(ks)))
+        run_src = ks[starts] // n
+        run_lbl = ks[starts] % n
+        # per src: label with max count (ties -> smaller label via stable sort)
+        sel_key = run_src * (len(dst) + 2) + (len(dst) + 1 - counts)
+        sorder = np.argsort(sel_key, kind="stable")
+        ssrc = run_src[sorder]
+        first = np.ones(len(ssrc), dtype=bool)
+        if len(ssrc):
+            first[1:] = ssrc[1:] != ssrc[:-1]
+        win_src = ssrc[first]
+        win_lbl = run_lbl[sorder][first]
+        new_labels = labels.copy()
+        new_labels[win_src] = win_lbl
+        if np.array_equal(new_labels, labels):
+            break
+        labels = new_labels
+    # order by (community, -degree): hubs lead their community
+    deg = rnz
+    return np.lexsort((-deg, labels)).astype(np.int64)
+
+
+def edge_cut_quality(adj: CSRMatrix, perm: np.ndarray, tile: int) -> float:
+    """Fraction of edges that stay inside a tile after permuting by perm.
+
+    Higher is better; used by tests to check RCM/BFS beat random order.
+    """
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    rows = np.repeat(np.arange(adj.rows), adj.row_nnz())
+    prows = inv[rows] // tile
+    pcols = inv[adj.indices] // tile
+    return float((prows == pcols).mean()) if adj.nnz else 1.0

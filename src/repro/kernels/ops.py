@@ -1,0 +1,74 @@
+"""Jit'd public wrappers around the FlexVector Pallas kernels."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataflow import plan_kernel_grid
+from repro.core.sparse_formats import TiledELL
+from repro.kernels import flexvector_spmm as fv
+
+
+def flexvector_spmm(
+    ell: TiledELL,
+    dense: jax.Array,
+    *,
+    block_rows: int = 128,
+    block_k: int = 128,
+    block_f: int = 128,
+    skip_empty: bool = True,
+    hot_k_first: bool = True,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Compute the sub-row products ``ell @ dense`` with the Pallas kernel.
+
+    Returns (padded_rows, F) sub-row outputs; callers apply
+    ``segment_accumulate`` to fold vertex-cut splits back together.
+    The launch schedule comes from ``plan_kernel_grid`` — the hierarchical
+    dataflow plan (k-innermost output-stationary, hot k-tiles first,
+    empty (row-block, k-tile) cells skipped when ``skip_empty``).
+    """
+    k_dim, f_dim = dense.shape
+    cols_p, vals_p, dense_p, _ = fv.pad_operands(
+        ell.cols, ell.vals, dense, block_rows, block_k, block_f
+    )
+    if skip_empty:
+        grid = plan_kernel_grid(
+            ell,
+            f_dim,
+            block_rows=block_rows,
+            block_k=block_k,
+            block_f=block_f,
+            skip_empty=True,
+            hot_k_first=hot_k_first,
+        )
+        out = fv.spmm_ell_sparse_grid(
+            cols_p,
+            vals_p,
+            dense_p,
+            jnp.asarray(grid.pairs[:, 0], jnp.int32),
+            jnp.asarray(grid.pairs[:, 1], jnp.int32),
+            jnp.asarray(grid.first_k.astype(np.int32)),
+            block_rows=block_rows,
+            block_k=block_k,
+            block_f=block_f,
+            out_dtype=out_dtype,
+            interpret=interpret,
+        )
+    else:
+        out = fv.spmm_ell_dense_grid(
+            cols_p,
+            vals_p,
+            dense_p,
+            block_rows=block_rows,
+            block_k=block_k,
+            block_f=block_f,
+            out_dtype=out_dtype,
+            interpret=interpret,
+        )
+    return out[: ell.padded_rows, :f_dim]

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the FlexVector Pallas kernels.
+
+Every kernel in this package is validated against these references in
+``tests/test_spmm_kernel.py`` across shape/dtype sweeps (interpret mode on
+CPU, real lowering on TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PAD_COL = -1
+
+
+def spmm_ell_ref(cols: jax.Array, vals: jax.Array, dense: jax.Array,
+                 out_dtype=None) -> jax.Array:
+    """Row-wise product oracle over the bounded-RNZ ELL table.
+
+    out[i] = sum_t vals[i, t] * dense[cols[i, t]]  (PAD_COL slots masked)
+
+    Matches the kernels' sub-row output (before vertex-cut partial-sum
+    accumulation, which ``repro.core.spmm.segment_accumulate`` applies).
+    """
+    if out_dtype is None:
+        out_dtype = (
+            jnp.int32 if jnp.issubdtype(dense.dtype, jnp.integer)
+            else jnp.float32
+        )
+    mask = cols != PAD_COL
+    safe = jnp.where(mask, cols, 0)
+    gathered = dense[safe].astype(out_dtype)               # (R, tau, F)
+    w = jnp.where(mask, vals, 0).astype(out_dtype)         # (R, tau)
+    return (gathered * w[..., None]).sum(axis=1)
+
+
+def expand_block_ref(cols: jax.Array, vals: jax.Array, kb_base: int,
+                     block_k: int, acc_dtype=jnp.float32) -> jax.Array:
+    """Oracle for the in-kernel one-hot block expansion."""
+    br, tau = cols.shape
+    local = cols - kb_base
+    out = jnp.zeros((br, block_k), acc_dtype)
+    in_range = (local >= 0) & (local < block_k) & (cols != PAD_COL)
+    safe = jnp.where(in_range, local, 0)
+    rows = jnp.broadcast_to(jnp.arange(br)[:, None], (br, tau))
+    return out.at[rows.ravel(), safe.ravel()].add(
+        jnp.where(in_range, vals, 0).astype(acc_dtype).ravel()
+    )

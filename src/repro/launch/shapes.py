@@ -1,0 +1,120 @@
+"""Input-shape sets for the assigned architectures (40 cells).
+
+Every shape resolves to ShapeDtypeStruct stand-ins — weak-type-correct,
+shardable, zero device allocation — for the step function the shape
+exercises:
+
+  train_4k     (seq 4096,   gbs 256) -> train_step   (fwd+bwd+AdamW)
+  prefill_32k  (seq 32768,  gbs 32)  -> prefill_step (full-seq forward)
+  decode_32k   (seq 32768,  gbs 128) -> serve_step   (1 token + KV cache)
+  long_500k    (seq 524288, gbs 1)   -> serve_step, sub-quadratic archs only
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import ShardingPlan, batch_spec
+from repro.launch.mesh import dp_axes
+from repro.models import lm
+from repro.train.optimizer import adamw_init
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    """Cells that are architecturally undefined (recorded, not silently
+    dropped)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic():
+        return (f"{cfg.name} is pure full-attention: a 512k-token KV cache "
+                "is unbounded (no SWA window / recurrent state); skipped "
+                "per assignment")
+    return None
+
+
+def _sharded_struct(tree, shardings):
+    return jax.tree.map(
+        lambda leaf, sh: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                              sharding=sh),
+        tree, shardings,
+    )
+
+
+def opt_dtype_for(cfg: ArchConfig):
+    """bf16 optimizer state for >=100B params (memory; DESIGN.md §5.4)."""
+    return jnp.bfloat16 if cfg.param_count() >= 100e9 else jnp.float32
+
+
+def input_specs(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh: Mesh,
+    plan: Optional[ShardingPlan] = None,
+) -> Dict[str, Any]:
+    """ShapeDtypeStructs (with shardings) for the step fn of this cell."""
+    plan = plan or ShardingPlan(mesh)
+    dp = dp_axes(mesh)
+    bspec = batch_spec(mesh, shape.global_batch)
+    b, s = shape.global_batch, shape.seq_len
+
+    params_shape = jax.eval_shape(
+        lambda: lm.init_lm(cfg, jax.random.PRNGKey(0)))
+    params = _sharded_struct(params_shape, plan.shard_params(params_shape))
+
+    out: Dict[str, Any] = {"params": params}
+    if shape.kind == "train":
+        tokens = jax.ShapeDtypeStruct(
+            (b, s), jnp.int32, sharding=NamedSharding(mesh, bspec))
+        opt_shape = jax.eval_shape(
+            lambda: adamw_init(params_shape, dtype=opt_dtype_for(cfg)))
+        opt = _sharded_struct(
+            opt_shape, _opt_shardings(opt_shape, params_shape, plan, mesh))
+        out.update(tokens=tokens, opt_state=opt)
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (b, s), jnp.int32, sharding=NamedSharding(mesh, bspec))
+    else:  # decode
+        cache_shape = jax.eval_shape(
+            lambda: lm.init_cache(cfg, b, s))
+        out["cache"] = _sharded_struct(
+            cache_shape, plan.shard_cache(cache_shape, dp))
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (b, 1), jnp.int32, sharding=NamedSharding(mesh, bspec))
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    if cfg.frontend_tokens and shape.kind in ("train", "prefill"):
+        out["memory"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, bspec))
+    return out
+
+
+def _opt_shardings(opt_shape, params_shape, plan: ShardingPlan, mesh: Mesh):
+    """Optimizer state mirrors the parameter shardings (mu/nu), scalar
+    step replicated."""
+    pshard = plan.shard_params(params_shape)
+    return type(opt_shape)(
+        step=NamedSharding(mesh, P()),
+        mu=pshard,
+        nu=pshard,
+    )

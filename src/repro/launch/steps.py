@@ -1,0 +1,61 @@
+"""Step-function builders (train / prefill / serve) for lowering + running."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.policy import sharding_policy
+from repro.models import lm
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def build_train_step(cfg: ArchConfig, opt_cfg: Optional[AdamWConfig] = None,
+                     mesh=None, remat: bool = True) -> Callable:
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, tokens, memory=None):
+        with sharding_policy(mesh):
+            loss, grads = jax.value_and_grad(
+                lambda p: lm.lm_loss(p, cfg, tokens, memory, remat=remat)
+            )(params)
+            new_params, new_opt, metrics = adamw_update(
+                opt_cfg, grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig, mesh=None) -> Callable:
+    def prefill_step(params, tokens, memory=None):
+        with sharding_policy(mesh):
+            x = lm.forward_hidden(params, cfg, tokens, memory)
+            # head only on the last position: never materialize (B,S,V)
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"])
+            logits = (x[:, -1, :] @ head.astype(x.dtype)).astype(jnp.float32)
+        return logits
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ArchConfig, mesh=None) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        with sharding_policy(mesh):
+            logits, new_cache = lm.decode_step(params, cfg, cache, tokens, pos)
+        return logits, new_cache
+
+    return serve_step
+
+
+def step_for(cfg: ArchConfig, kind: str, mesh=None) -> Callable:
+    if kind == "train":
+        return build_train_step(cfg, mesh=mesh)
+    if kind == "prefill":
+        return build_prefill_step(cfg, mesh=mesh)
+    if kind == "decode":
+        return build_serve_step(cfg, mesh=mesh)
+    raise ValueError(kind)

@@ -1,0 +1,76 @@
+"""End-to-end LM training launcher.
+
+Runs real steps on the available devices (CPU here; the same code path
+drives a TPU slice — the mesh shrinks to what exists).  For full-scale
+lowering against the production mesh use ``repro.launch.dryrun``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --reduced --steps 20 --batch 8 --seq 128
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.data.synthetic import token_batches
+from repro.launch.steps import build_train_step
+from repro.train import AdamWConfig, TrainerConfig, adamw_init, run
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, loss_chunk=min(cfg.loss_chunk, args.seq))
+    from repro.models import lm
+
+    params = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps)
+    opt = adamw_init(params)
+    step = jax.jit(build_train_step(cfg, opt_cfg))
+
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, "
+          f"batch {args.batch} x seq {args.seq}")
+
+    batches = token_batches(cfg.vocab, args.batch, args.seq, seed=0)
+    memory = None
+    if cfg.frontend_tokens:
+        memory = jnp.zeros((args.batch, cfg.frontend_tokens, cfg.d_model),
+                           jnp.bfloat16)
+
+    def step_fn(state, batch):
+        p, o, metrics = step(state["params"], state["opt"], batch, memory) \
+            if memory is not None else step(state["params"], state["opt"],
+                                            batch)
+        return {"params": p, "opt": o}, {k: float(v)
+                                         for k, v in metrics.items()}
+
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=max(args.steps // 2, 5), log_every=5)
+    state, report = run(tcfg, {"params": params, "opt": opt}, step_fn,
+                        batches)
+    print(f"done: {report.steps_done} steps, "
+          f"loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

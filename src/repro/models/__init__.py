@@ -1,0 +1,19 @@
+"""Model zoo: the paper's GCN workload + the 10 assigned LM architectures."""
+
+from repro.models.gcn import (
+    GCNConfig,
+    GCNGraph,
+    gcn_accuracy,
+    gcn_forward,
+    gcn_loss,
+    init_params,
+)
+
+__all__ = [
+    "GCNConfig",
+    "GCNGraph",
+    "gcn_accuracy",
+    "gcn_forward",
+    "gcn_loss",
+    "init_params",
+]

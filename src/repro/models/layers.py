@@ -1,0 +1,472 @@
+"""Shared transformer primitives (pure functions over param pytrees).
+
+Covers every attention flavour in the assigned pool: GQA, MLA (DeepSeek
+latent attention, absorbed decode path), sliding-window, qk-norm, QKV bias,
+cross-attention — plus SwiGLU FFNs and scatter-based top-k MoE with
+shared experts.
+
+Conventions: params are nested dicts of jnp arrays; activations are bf16
+(or the embedding dtype) with fp32 softmax/normalization; every init_*
+returns the params for ONE layer — the decoder stacks them over periods
+for scan-over-layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# norms + rope
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, head_dim); positions: (seq,) or (batch, seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    while cos.ndim < x1.ndim:                           # broadcast over heads
+        cos, sin = cos[..., None, :, :], sin[..., None, :, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense init helper
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (full / sliding-window / cross / cached decode)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ArchConfig, key, cross: bool = False) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.bfloat16)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.bfloat16)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.bfloat16)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.bfloat16)
+        p["k_norm"] = jnp.ones((hd,), jnp.bfloat16)
+    return p
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1)
+
+
+ATTN_Q_BLOCK = 512   # query-block size for the memory-bounded train path
+
+
+def _sdpa_blocked(
+    q: jax.Array,            # (B, S_q, H, hd)
+    k: jax.Array,            # (B, S_k, KV, hd)
+    v: jax.Array,            # (B, S_k, KV, hd)
+    q_pos: jax.Array,        # (S_q,)
+    k_pos: jax.Array,        # (S_k,)
+    causal: bool,
+    window: int,
+) -> jax.Array:
+    """Query-blocked attention: the (S_q, S_k) score tensor only ever
+    materializes one q-block at a time (remat'd), bounding attention
+    memory by B x H x q_block x S_k — the production path for long
+    training/prefill sequences."""
+    b, sq, h, hd = q.shape
+    blk = ATTN_Q_BLOCK
+    n_blk = sq // blk
+
+    def one_block(args):
+        q_b, qp_b = args
+        mask = None
+        if causal:
+            m = k_pos[None, :] <= qp_b[:, None]
+            if window:
+                m &= k_pos[None, :] > qp_b[:, None] - window
+            mask = m[None, None]
+        return _sdpa(q_b, k, v, mask)
+
+    def body(_, args):
+        return None, jax.checkpoint(one_block)(args)
+
+    qm = q.reshape(b, n_blk, blk, h, hd).swapaxes(0, 1)     # (n,B,blk,H,hd)
+    pm = q_pos.reshape(n_blk, blk)
+    _, outs = jax.lax.scan(body, None, (qm, pm))
+    return outs.swapaxes(0, 1).reshape(b, sq, -1)
+
+
+def _sdpa(
+    q: jax.Array,            # (B, S_q, H, hd)
+    k: jax.Array,            # (B, S_k, KV, hd)
+    v: jax.Array,            # (B, S_k, KV, hd)
+    mask: Optional[jax.Array],  # broadcastable to (B, H, S_q, S_k), bool
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, sq, kv, group, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    # keep the S^2 scores sharded: kv-heads, else head-group, else a
+    # sequence dim over the model axis (never replicate this tensor)
+    from repro.dist.policy import constrain
+
+    dp = ("pod", "data")
+    scores = constrain(scores, [
+        (dp, "model", None, None, None), ("data", "model", None, None, None),
+        (dp, None, "model", None, None), ("data", None, "model", None, None),
+        (dp, None, None, "model", None), ("data", None, None, "model", None),
+        (dp, None, None, None, "model"), ("data", None, None, None, "model"),
+    ])
+    if mask is not None:
+        # mask is (B|1, 1, S_q|1, S_k); insert the head-group axis
+        scores = jnp.where(mask[:, :, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, -1)  # v head dim may differ from q (MLA)
+
+
+def attention(
+    p: Params,
+    x: jax.Array,                       # (B, S, D)
+    cfg: ArchConfig,
+    positions: jax.Array,               # (S,)
+    kv_source: Optional[jax.Array] = None,   # cross-attn memory (B, S_kv, D)
+    cache: Optional[Params] = None,          # decode cache
+    cache_pos: Optional[jax.Array] = None,   # scalar write position
+    causal: bool = True,
+    cross: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Unified attention: self/cross, train/decode, full/SWA.
+
+    Returns (output BEFORE the wo projection, updated_cache).  For
+    cross-attention (``cross=True``) the cache holds the projected memory
+    (computed once at prefill; during decode ``kv_source`` may be None).
+    """
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = _split_heads(q, cfg.n_heads)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+
+    src = kv_source if kv_source is not None else x
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = _split_heads(k, cfg.n_kv_heads)
+    v = _split_heads(v, cfg.n_kv_heads)
+    if "k_norm" in p:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    is_self = not cross
+    if is_self:
+        q = apply_rope(q.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+
+    if cache is None:
+        # full-sequence path (training / encoder / prefill)
+        if is_self and s > ATTN_Q_BLOCK and s % ATTN_Q_BLOCK == 0:
+            return _sdpa_blocked(
+                q, k, v, positions, positions,
+                causal=causal, window=cfg.swa_window), None
+        if is_self and causal:
+            i = positions[:, None]
+            j = positions[None, :]
+            mask = j <= i
+            if cfg.swa_window:
+                mask &= j > i - cfg.swa_window
+            mask = mask[None, None]
+        else:
+            mask = None
+        return _sdpa(q, k, v, mask), None
+
+    # --- cached decode -----------------------------------------------------
+    if is_self:
+        s_cache = cache["k"].shape[1]
+        write = cache_pos % s_cache if cfg.swa_window else cache_pos
+        new_k = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, write, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, write, 0, 0))
+        idx = jnp.arange(s_cache)
+        if cfg.swa_window:
+            # rolling buffer: everything written so far is in-window
+            valid = (idx <= cache_pos) | (cache_pos >= s_cache)
+        else:
+            valid = idx <= cache_pos
+        mask = valid[None, None, None, :]
+        out = _sdpa(q, new_k, new_v, mask)
+        return out, {"k": new_k, "v": new_v}
+    else:
+        # cross-attn: memory projected once at prefill; cache carries (k, v)
+        if kv_source is None:
+            k, v = cache["k"], cache["v"]
+        out = _sdpa(q, k, v, None)
+        return out, {"k": k, "v": v}
+
+
+def init_self_cache(
+    cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16
+) -> Params:
+    s = min(max_seq, cfg.swa_window) if cfg.swa_window else max_seq
+    shape = (batch, s, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2), absorbed decode path
+# ---------------------------------------------------------------------------
+
+
+def init_mla(cfg: ArchConfig, key) -> Params:
+    m = cfg.mla
+    assert m is not None
+    d = cfg.d_model
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "wkv_a": dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.bfloat16),
+        "wk_b": dense_init(ks[2], m.kv_lora_rank, cfg.n_heads * m.qk_nope_head_dim),
+        "wv_b": dense_init(ks[3], m.kv_lora_rank, cfg.n_heads * m.v_head_dim),
+        "wo": dense_init(ks[4], cfg.n_heads * m.v_head_dim, d),
+    }
+    if m.q_lora_rank:
+        p["wq_a"] = dense_init(ks[5], d, m.q_lora_rank)
+        p["q_norm"] = jnp.ones((m.q_lora_rank,), jnp.bfloat16)
+        p["wq_b"] = dense_init(ks[6], m.q_lora_rank, cfg.n_heads * qd)
+    else:
+        p["wq"] = dense_init(ks[0], d, cfg.n_heads * qd)
+    return p
+
+
+def mla_attention(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    cache: Optional[Params] = None,
+    cache_pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """MLA: KV compressed into a shared latent + a shared rope key.
+
+    Train path expands k/v from the latent; decode path absorbs wk_b/wv_b
+    into the query/output so the cache stays (B, S, r + rope_dim).
+    """
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, r = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                     m.v_head_dim, m.kv_lora_rank)
+
+    if m.q_lora_rank:
+        q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions, cfg.rope_theta
+                        ).swapaxes(1, 2)
+
+    kv_a = x @ p["wkv_a"]                                   # (B,S,r+dr)
+    c_kv = rms_norm(kv_a[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., r:][:, :, None, :]                   # (B,S,1,dr)
+    k_rope = apply_rope(k_rope.swapaxes(1, 2), positions, cfg.rope_theta
+                        ).swapaxes(1, 2)
+
+    if cache is None:
+        # training/prefill: expand latent into per-head k/v
+        k_nope = (c_kv @ p["wk_b"]).reshape(b, s, h, dn)
+        v = (c_kv @ p["wv_b"]).reshape(b, s, h, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))],
+                            axis=-1)
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        i, j = positions[:, None], positions[None, :]
+        mask = (j <= i)[None, None]
+        out = _sdpa(qfull, k, v, mask)
+        return out @ p["wo"], None
+
+    # --- absorbed decode: scores live in latent space ----------------------
+    new_c = jax.lax.dynamic_update_slice(
+        cache["c"], c_kv.astype(cache["c"].dtype), (0, cache_pos, 0))
+    new_kr = jax.lax.dynamic_update_slice(
+        cache["kr"], k_rope[:, :, 0, :].astype(cache["kr"].dtype),
+        (0, cache_pos, 0))
+    wk_b = p["wk_b"].reshape(r, h, dn)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk_b)      # absorb wk_b
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_lat, new_c)
+        + jnp.einsum("bshd,btd->bhst", q_rope, new_kr)
+    ).astype(jnp.float32) / jnp.sqrt(dn + dr)
+    from repro.dist.policy import constrain
+
+    dp = ("pod", "data")
+    scores = constrain(scores, [
+        (dp, "model", None, None), ("data", "model", None, None),
+        (dp, None, None, "model"), ("data", None, None, "model"),
+    ])
+    valid = jnp.arange(new_c.shape[1]) <= cache_pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btr->bshr", probs, new_c)      # (B,S,H,r)
+    wv_b = p["wv_b"].reshape(r, h, dv)
+    out = jnp.einsum("bshr,rhv->bshv", o_lat, wv_b)         # absorb wv_b
+    out = out.reshape(b, s, h * dv) @ p["wo"]
+    return out, {"c": new_c, "kr": new_kr}
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> Params:
+    m = cfg.mla
+    return {
+        "c": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# FFN: SwiGLU + scatter-based top-k MoE
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ArchConfig, key, width: int = 0) -> Params:
+    d = cfg.d_model
+    w = width or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(ks[0], d, w),
+        "up": dense_init(ks[1], d, w),
+        "down": dense_init(ks[2], w, d),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["gate"]) * (x @ p["up"])) @ p["down"]
+
+
+def init_moe(cfg: ArchConfig, key) -> Params:
+    moe = cfg.moe
+    d = cfg.d_model
+    w = moe.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    e = moe.n_experts
+
+    def stack(key, d_in, d_out):
+        return dense_init(key, d_in, d_out * e).reshape(d_in, e, d_out
+                                                        ).swapaxes(0, 1)
+
+    p: Params = {
+        "router": dense_init(ks[0], d, e, dtype=jnp.float32),
+        "gate": stack(ks[1], d, w),    # (E, D, W)
+        "up": stack(ks[2], d, w),
+        "down": dense_init(ks[3], w, d * e).reshape(w, e, d).swapaxes(0, 1),
+    }
+    if moe.n_shared:
+        p["shared"] = init_mlp(cfg, ks[4], width=w * moe.n_shared)
+    return p
+
+
+def moe_layer(p: Params, x: jax.Array, moe: MoEConfig) -> jax.Array:
+    """Token-dispatch MoE — the paper's SpMM view of expert routing.
+
+    The (tokens x experts) dispatch matrix is row-bounded sparse with
+    exactly top_k nonzeros per row: the vertex-cut bound holds by
+    construction (DESIGN.md §4).  Dispatch = sort tokens by expert
+    (grid compaction), pad each expert to capacity (the ELL bound), then
+    grouped GEMMs — the same machinery as the FlexVector kernel's
+    bounded-row schedule, expressed at the XLA level so it shards with
+    expert parallelism (experts axis -> all-to-all).
+    """
+    b, s, d = x.shape
+    n = b * s
+    e, k = moe.n_experts, moe.top_k
+    xt = x.reshape(n, d)
+    from repro.dist.policy import constrain
+
+    xt = constrain(xt, [(("pod", "data"), None), ("data", None)])
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    gates, eids = jax.lax.top_k(logits, k)                  # (N, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    cap = int(-(-n * k // e) * moe.capacity_factor)
+    cap = max(-(-cap // 8) * 8, 8)
+
+    flat_e = eids.reshape(-1)                               # (N*k,)
+    # position of each routed token inside its expert's buffer
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos_all = (jnp.cumsum(onehot, axis=0) - 1)              # (N*k, E)
+    pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    tok = jnp.arange(n * k) // k
+
+    keep = pos < cap                                        # dropped overflow
+    safe_pos = jnp.where(keep, pos, cap - 1)
+    routed = constrain(xt[tok], [(("pod", "data"), None), ("data", None)])
+    val = jnp.where(keep[:, None], routed, 0)               # (N*k, D)
+    val = constrain(val, [(("pod", "data"), None), ("data", None)])
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_e, safe_pos].add(val, mode="drop")
+    # expert parallelism: keep the dispatch buffer sharded (E over model
+    # when it divides, else capacity over model) — replicating it is a
+    # per-device OOM at production scale.
+    buf = constrain(buf, [("model", "data", None), ("model", None, None),
+                          (None, ("pod", "data"), None), (None, "data", None)])
+
+    h = jax.nn.silu(jnp.einsum("ecd,edw->ecw", buf, p["gate"]))
+    h = h * jnp.einsum("ecd,edw->ecw", buf, p["up"])
+    out_buf = jnp.einsum("ecw,ewd->ecd", h, p["down"])      # (E, cap, D)
+
+    gathered = out_buf[flat_e, safe_pos]                    # (N*k, D)
+    gathered = constrain(
+        gathered, [(("pod", "data"), None), ("data", None)])
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weighted = gathered * gates.reshape(-1)[:, None].astype(x.dtype)
+    weighted = constrain(weighted, [(("pod", "data"), None),
+                                    ("data", None)])
+    out = jax.ops.segment_sum(weighted, tok, num_segments=n)
+    out = constrain(out, [(("pod", "data"), None), ("data", None)])
+
+    if "shared" in p:
+        out = out + mlp(p["shared"], xt)
+    return out.reshape(b, s, d)

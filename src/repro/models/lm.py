@@ -1,0 +1,408 @@
+"""Generic LM builder: periodic decoder (+ optional encoder) over ArchConfig.
+
+One implementation covers all 10 assigned architectures:
+
+* the depth is ``n_periods`` repetitions of ``cfg.pattern`` (scan-over-
+  layers keeps the HLO a single period deep — mandatory for the 398B Jamba
+  to lower tractably);
+* each pattern entry is "<mixer>" or "<mixer>+<ffn>" with mixer in
+  {attn, xattn, attnx, mamba, mlstm, slstm} and ffn in {mlp, moe};
+  ``attn`` resolves to MLA when cfg.mla is set; ``attnx`` is
+  self+cross (enc-dec decoders); ``xattn`` is cross-only (VLM cadence);
+* ``first_dense`` leading blocks (DeepSeek's dense layer 0) are unstacked;
+* training/prefill uses the cache-free paths; ``decode_step`` threads
+  per-layer caches through the same scan.
+
+Params come from ``init_lm`` (real arrays, smoke tests) or
+``jax.eval_shape(init_lm, ...)`` (dry-run, no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+
+
+def _parse(entry: str) -> Tuple[str, Optional[str]]:
+    if "+" in entry:
+        mixer, ffn = entry.split("+")
+        return mixer, ffn
+    return entry, None
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ArchConfig, kind: str, key) -> Params:
+    mixer, ffn = _parse(kind)
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": jnp.ones((cfg.d_model,), jnp.bfloat16)}
+    if mixer == "attn":
+        p["mix"] = (L.init_mla(cfg, ks[0]) if cfg.mla is not None
+                    else L.init_attention(cfg, ks[0]))
+    elif mixer == "xattn":
+        p["mix"] = L.init_attention(cfg, ks[0], cross=True)
+    elif mixer == "attnx":
+        p["mix"] = L.init_attention(cfg, ks[0])
+        p["cross"] = L.init_attention(cfg, ks[3], cross=True)
+        p["norm_c"] = jnp.ones((cfg.d_model,), jnp.bfloat16)
+    elif mixer == "mamba":
+        p["mix"] = S.init_mamba(cfg, ks[0])
+    elif mixer == "mlstm":
+        p["mix"] = S.init_mlstm(cfg, ks[0])
+    elif mixer == "slstm":
+        p["mix"] = S.init_slstm(cfg, ks[0])
+    else:
+        raise ValueError(f"unknown mixer {mixer}")
+    if ffn is not None:
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.bfloat16)
+        p["ffn"] = (L.init_moe(cfg, ks[1]) if ffn == "moe"
+                    else L.init_mlp(cfg, ks[1]))
+    return p
+
+
+def _apply_block(
+    cfg: ArchConfig,
+    kind: str,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    memory: Optional[jax.Array],
+    cache: Optional[Params],
+    cache_pos: Optional[jax.Array],
+) -> Tuple[jax.Array, Optional[Params]]:
+    mixer, ffn = _parse(kind)
+    new_cache: Params = {}
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mixer == "attn":
+        if cfg.mla is not None:
+            out, c = L.mla_attention(
+                p["mix"], h, cfg, positions,
+                cache=None if cache is None else cache["self"],
+                cache_pos=cache_pos)
+        else:
+            out, c = L.attention(
+                p["mix"], h, cfg, positions,
+                cache=None if cache is None else cache["self"],
+                cache_pos=cache_pos)
+            out = out @ p["mix"]["wo"]
+        if c is not None:
+            new_cache["self"] = c
+    elif mixer == "xattn":
+        out, c = L.attention(
+            p["mix"], h, cfg, positions, kv_source=memory,
+            cache=None if cache is None else cache["cross"],
+            cache_pos=cache_pos, causal=False, cross=True)
+        out = out @ p["mix"]["wo"]
+        if c is not None:
+            new_cache["cross"] = c
+    elif mixer == "attnx":
+        out, c = L.attention(
+            p["mix"], h, cfg, positions,
+            cache=None if cache is None else cache["self"],
+            cache_pos=cache_pos)
+        out = out @ p["mix"]["wo"]
+        if c is not None:
+            new_cache["self"] = c
+        x = x + out
+        h = L.rms_norm(x, p["norm_c"], cfg.norm_eps)
+        out, c = L.attention(
+            p["cross"], h, cfg, positions, kv_source=memory,
+            cache=None if cache is None else cache["cross"],
+            cache_pos=cache_pos, causal=False, cross=True)
+        out = out @ p["cross"]["wo"]
+        if c is not None:
+            new_cache["cross"] = c
+    elif mixer == "mamba":
+        out, c = S.mamba_block(
+            p["mix"], h, cfg,
+            state=None if cache is None else cache["state"])
+        if cache is not None:
+            new_cache["state"] = c
+    elif mixer == "mlstm":
+        out, c = S.mlstm_block(
+            p["mix"], h, cfg,
+            state=None if cache is None else cache["state"])
+        if cache is not None:
+            new_cache["state"] = c
+    elif mixer == "slstm":
+        out, c = S.slstm_block(
+            p["mix"], h, cfg,
+            state=None if cache is None else cache["state"])
+        if cache is not None:
+            new_cache["state"] = c
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    if ffn is not None:
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if "router" in p["ffn"]:
+            x = x + L.moe_layer(p["ffn"], h, cfg.moe)
+        else:
+            x = x + L.mlp(p["ffn"], h)
+    return x, (new_cache if cache is not None else None)
+
+
+def init_lm(cfg: ArchConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32)
+                  * 0.02).astype(jnp.bfloat16),
+        "final_norm": jnp.ones((d,), jnp.bfloat16),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[1], d, cfg.vocab)
+
+    first = cfg.moe.first_dense if cfg.moe else 0
+    if first:
+        dense_cfg = dataclasses.replace(cfg, moe=None)
+        hkeys = jax.random.split(ks[2], first)
+        params["head_blocks"] = [
+            _init_block(dense_cfg, "attn+mlp", hkeys[i]) for i in range(first)
+        ]
+
+    n_body = cfg.n_layers - first
+    n_periods = n_body // len(cfg.pattern)
+    assert n_periods * len(cfg.pattern) == n_body, cfg.name
+    pkeys = jax.random.split(ks[3], n_periods)
+
+    def init_period(k):
+        bkeys = jax.random.split(k, len(cfg.pattern))
+        return {
+            f"b{i}": _init_block(cfg, kind, bkeys[i])
+            for i, kind in enumerate(cfg.pattern)
+        }
+
+    params["blocks"] = jax.vmap(init_period)(pkeys)
+
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(ks[4], cfg.encoder_layers)
+        enc_cfg = dataclasses.replace(cfg, moe=None)
+
+        def init_enc(k):
+            return _init_block(enc_cfg, "attn+mlp", k)
+
+        params["encoder"] = jax.vmap(init_enc)(ekeys)
+        params["enc_norm"] = jnp.ones((d,), jnp.bfloat16)
+    return params
+
+
+def n_body_periods(cfg: ArchConfig) -> int:
+    first = cfg.moe.first_dense if cfg.moe else 0
+    return (cfg.n_layers - first) // len(cfg.pattern)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def encode(params: Params, cfg: ArchConfig, memory_embeds: jax.Array) -> jax.Array:
+    """Bidirectional encoder over precomputed frontend embeddings."""
+    enc_cfg = dataclasses.replace(cfg, moe=None)
+    x = memory_embeds
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, blk):
+        h2 = L.rms_norm(h, blk["norm1"], cfg.norm_eps)
+        out, _ = L.attention(blk["mix"], h2, enc_cfg, positions, causal=False)
+        h = h + out @ blk["mix"]["wo"]
+        h2 = L.rms_norm(h, blk["norm2"], cfg.norm_eps)
+        return h + L.mlp(blk["ffn"], h2), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"], unroll=cfg.scan_unroll)
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward_hidden(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jax.Array,                       # (B, S) int32
+    memory: Optional[jax.Array] = None,      # frontend embeds (B, T, D)
+    remat: bool = False,
+) -> jax.Array:
+    """Full-sequence causal forward -> final-norm hidden states (B, S, D)."""
+    x = params["embed"][tokens].astype(jnp.bfloat16)
+    positions = jnp.arange(tokens.shape[1])
+    if cfg.encoder_layers and memory is not None:
+        memory = encode(params, cfg, memory)
+
+    for blk in params.get("head_blocks", []):
+        dense_cfg = dataclasses.replace(cfg, moe=None)
+        x, _ = _apply_block(dense_cfg, "attn+mlp", blk, x, positions,
+                            memory, None, None)
+
+    def body(h, period):
+        for i, kind in enumerate(cfg.pattern):
+            h, _ = _apply_block(cfg, kind, period[f"b{i}"], h, positions,
+                                memory, None, None)
+        # sequence parallelism on the inter-period activation: the remat
+        # scan stashes one carry per period — sharding its sequence dim
+        # over the model axis (Megatron-SP) divides that stash by the TP
+        # width; XLA re-gathers it inside attention automatically.
+        from repro.dist.policy import constrain
+
+        h = constrain(h, [
+            (("pod", "data"), "model", None),
+            ("data", "model", None),
+            (None, "model", None),
+        ])
+        return h, None
+
+    if remat:  # recompute each period in the backward pass
+        body = jax.checkpoint(body, policy=None)
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def _head(params: Params, cfg: ArchConfig) -> jax.Array:
+    return (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+
+def forward(params, cfg, tokens, memory=None, remat: bool = False) -> jax.Array:
+    """Full logits (B, S, vocab) fp32 — small models / tests only; the
+    production paths (loss, prefill, decode) never materialize this."""
+    x = forward_hidden(params, cfg, tokens, memory, remat=remat)
+    return (x @ _head(params, cfg).astype(x.dtype)).astype(jnp.float32)
+
+
+def lm_loss(params, cfg, tokens, memory=None, remat: bool = False) -> jax.Array:
+    """Next-token CE with a sequence-chunked head.
+
+    The (B, S, vocab) fp32 logits tensor is never materialized: the head
+    matmul + logsumexp run per chunk of ``cfg.loss_chunk`` positions under
+    remat, bounding head memory by B x chunk x vocab.  The full sequence
+    goes through the model (keeping S divisible for sequence sharding);
+    the final position's prediction is masked out of the loss instead.
+    """
+    x = forward_hidden(params, cfg, tokens, memory, remat=remat)
+    targets = jnp.roll(tokens, -1, axis=1)           # y_t = token_{t+1}
+    b, s, d = x.shape
+    head = _head(params, cfg)
+    chunk = min(cfg.loss_chunk, s)
+    n_chunks = s // chunk
+    assert n_chunks * chunk == s, "loss_chunk must divide seq_len"
+    # position weights: the last position has no next token
+    w = jnp.concatenate(
+        [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1), jnp.float32)],
+        axis=1)
+
+    def chunk_nll(x_c, y_c, w_c):
+        logits = (x_c @ head.astype(x_c.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return ((lse - tgt) * w_c).sum()
+
+    def body(acc, xs):
+        return acc + jax.checkpoint(chunk_nll)(*xs), None
+
+    xm = x.reshape(b, n_chunks, chunk, d)
+    ym = targets.reshape(b, n_chunks, chunk)
+    wm = w.reshape(b, n_chunks, chunk)
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32),
+        (xm.swapaxes(0, 1), ym.swapaxes(0, 1), wm.swapaxes(0, 1)),
+        unroll=8)
+    return total / (b * (s - 1))
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def _init_block_cache(cfg: ArchConfig, kind: str, batch: int,
+                      max_seq: int) -> Params:
+    mixer, _ = _parse(kind)
+    mem_t = cfg.frontend_tokens or 1
+    if mixer == "attn":
+        if cfg.mla is not None:
+            return {"self": L.init_mla_cache(cfg, batch, max_seq)}
+        return {"self": L.init_self_cache(cfg, batch, max_seq)}
+    if mixer == "xattn":
+        shape = (batch, mem_t, cfg.n_kv_heads, cfg.resolved_head_dim)
+        return {"cross": {"k": jnp.zeros(shape, jnp.bfloat16),
+                          "v": jnp.zeros(shape, jnp.bfloat16)}}
+    if mixer == "attnx":
+        shape = (batch, mem_t, cfg.n_kv_heads, cfg.resolved_head_dim)
+        return {"self": L.init_self_cache(cfg, batch, max_seq),
+                "cross": {"k": jnp.zeros(shape, jnp.bfloat16),
+                          "v": jnp.zeros(shape, jnp.bfloat16)}}
+    if mixer == "mamba":
+        return {"state": S.init_mamba_state(cfg, batch)}
+    if mixer == "mlstm":
+        return {"state": S.init_mlstm_state(cfg, batch)}
+    if mixer == "slstm":
+        return {"state": S.init_slstm_state(cfg, batch)}
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> Params:
+    cache: Params = {}
+    first = cfg.moe.first_dense if cfg.moe else 0
+    if first:
+        cache["head_blocks"] = [
+            _init_block_cache(cfg, "attn+mlp", batch, max_seq)
+            for _ in range(first)
+        ]
+    n_periods = n_body_periods(cfg)
+
+    def one_period(_):
+        return {
+            f"b{i}": _init_block_cache(cfg, kind, batch, max_seq)
+            for i, kind in enumerate(cfg.pattern)
+        }
+
+    cache["blocks"] = jax.vmap(one_period)(jnp.arange(n_periods))
+    return cache
+
+
+def decode_step(
+    params: Params,
+    cfg: ArchConfig,
+    cache: Params,
+    tokens: jax.Array,                  # (B, 1) next token ids
+    pos: jax.Array,                     # scalar int32 current position
+) -> Tuple[jax.Array, Params]:
+    """One autoregressive step; returns (logits (B, vocab), new cache)."""
+    x = params["embed"][tokens].astype(jnp.bfloat16)
+    positions = jnp.full((1,), pos, jnp.int32)
+    new_cache: Params = {}
+
+    if "head_blocks" in params:
+        dense_cfg = dataclasses.replace(cfg, moe=None)
+        hb = []
+        for blk, c in zip(params["head_blocks"], cache["head_blocks"]):
+            x, nc = _apply_block(dense_cfg, "attn+mlp", blk, x, positions,
+                                 None, c, pos)
+            hb.append(nc)
+        new_cache["head_blocks"] = hb
+
+    def body(h, scanned):
+        period, pcache = scanned
+        ncs = {}
+        for i, kind in enumerate(cfg.pattern):
+            h, nc = _apply_block(cfg, kind, period[f"b{i}"], h, positions,
+                                 None, pcache[f"b{i}"], pos)
+            ncs[f"b{i}"] = nc
+        return h, ncs
+
+    x, scanned_cache = jax.lax.scan(
+        body, x, (params["blocks"], cache["blocks"]), unroll=cfg.scan_unroll)
+    new_cache["blocks"] = scanned_cache
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ _head(params, cfg).astype(x.dtype)).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,329 @@
+"""State-space / recurrent blocks: Mamba (Jamba) and xLSTM (mLSTM, sLSTM).
+
+All blocks expose the same contract as attention:
+  ``block(params, x, cfg, state=None) -> (y, new_state)``
+Full-sequence mode (state=None at input, scan over time inside) is used
+for training/prefill; single-step mode (state given, S==1) for decode.
+State size is constant in sequence length — these are the sub-quadratic
+architectures that make the ``long_500k`` shape feasible (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.dist.policy import constrain
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+SCAN_CHUNK = 64  # two-level remat scan: sqrt-style checkpointing in time
+
+
+def chunked_scan(step, carry, xs, ys_time_axis: int = 0):
+    """scan(step, carry, xs) with chunked rematerialization.
+
+    The naive backward of a length-S recurrence stashes the carry at every
+    step (e.g. the mLSTM's (B, H, hd, hd) matrix memory x 4096 steps); a
+    two-level scan checkpoints only every SCAN_CHUNK steps and recomputes
+    inside the chunk, bounding the stash by S/chunk + chunk carries.
+    """
+    leaves = jax.tree_util.tree_leaves(xs)
+    s = leaves[0].shape[0]
+    if s % SCAN_CHUNK or s <= SCAN_CHUNK:
+        return jax.lax.scan(step, carry, xs)
+    n_chunks = s // SCAN_CHUNK
+
+    def inner(c, xs_c):
+        return jax.lax.scan(step, c, xs_c)
+
+    def outer(c, xs_c):
+        return jax.checkpoint(inner)(c, xs_c)
+
+    xs_r = jax.tree.map(
+        lambda a: a.reshape(n_chunks, SCAN_CHUNK, *a.shape[1:]), xs)
+    carry, ys = jax.lax.scan(outer, carry, xs_r)
+    ys = jax.tree.map(
+        lambda a: a.reshape(n_chunks * SCAN_CHUNK, *a.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+
+def _ssm_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    ssm = cfg.ssm or SSMConfig()
+    d_in = ssm.expand * cfg.d_model
+    dt_rank = ssm.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, ssm.d_state
+
+
+def init_mamba(cfg: ArchConfig, key) -> Params:
+    ssm = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    d_in, dt_rank, d_state = _ssm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    a = jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                         (d_in, d_state))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in),
+        "conv": (jax.random.normal(ks[1], (ssm.d_conv, d_in), jnp.float32)
+                 * 0.1).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((d_in,), jnp.bfloat16),
+        "x_proj": dense_init(ks[2], d_in, dt_rank + 2 * d_state),
+        "dt_proj": dense_init(ks[3], dt_rank, d_in),
+        "dt_bias": jnp.full((d_in,), -4.6, jnp.float32),  # softplus ~ 0.01
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_in, d),
+    }
+
+
+def mamba_block(
+    p: Params,
+    x: jax.Array,                       # (B, S, D)
+    cfg: ArchConfig,
+    state: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    ssm = cfg.ssm or SSMConfig()
+    b, s, d = x.shape
+    d_in, dt_rank, d_state = _ssm_dims(cfg)
+
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                   # (B,S,d_in) each
+
+    # depthwise causal conv over time
+    if state is None:
+        pad = jnp.zeros((b, ssm.d_conv - 1, d_in), xi.dtype)
+        xpad = jnp.concatenate([pad, xi], axis=1)
+        conv_state_out = xpad[:, -(ssm.d_conv - 1):, :] if ssm.d_conv > 1 else None
+    else:
+        xpad = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+        conv_state_out = xpad[:, -(ssm.d_conv - 1):, :]
+    w = p["conv"].astype(jnp.float32)                   # (K, d_in)
+    xc = sum(
+        xpad[:, k : k + s, :].astype(jnp.float32) * w[k]
+        for k in range(ssm.d_conv)
+    ) + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc).astype(x.dtype)
+
+    proj = xc @ p["x_proj"]                             # (B,S,dt_rank+2N)
+    dt = jax.nn.softplus(
+        (proj[..., :dt_rank] @ p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"]
+    )                                                   # (B,S,d_in)
+    b_ssm = proj[..., dt_rank : dt_rank + d_state].astype(jnp.float32)
+    c_ssm = proj[..., dt_rank + d_state :].astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])                            # (d_in, N)
+    dtx = dt * xc.astype(jnp.float32)                   # (B,S,d_in)
+
+    def step(h, inputs):
+        # discretize per step: the (B, S, d_in, N) da/dBx tensors of the
+        # textbook formulation never materialize (selective-scan fusion)
+        dt_t, dtx_t, b_t, c_t = inputs
+        da_t = jnp.exp(dt_t[..., None] * a)             # (B,d_in,N)
+        h = h * da_t + dtx_t[..., None] * b_t[:, None, :]
+        h = constrain(h, [(None, "model", None)])       # shard the carry
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = (state["ssm"].astype(jnp.float32) if state is not None
+          else jnp.zeros((b, d_in, d_state), jnp.float32))
+    hT, ys = chunked_scan(
+        step, h0,
+        (dt.swapaxes(0, 1), dtx.swapaxes(0, 1),
+         b_ssm.swapaxes(0, 1), c_ssm.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1)                               # (B,S,d_in)
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+
+    new_state = {
+        "ssm": hT.astype(jnp.float32),
+        "conv": (conv_state_out if conv_state_out is not None
+                 else jnp.zeros((b, max(ssm.d_conv - 1, 1), d_in), x.dtype)),
+    }
+    return y, new_state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> Params:
+    ssm = cfg.ssm or SSMConfig()
+    d_in, _, d_state = _ssm_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, d_in, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, max(ssm.d_conv - 1, 1), d_in), jnp.bfloat16),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg: ArchConfig, key) -> Params:
+    d = cfg.d_model
+    d_in = 2 * d                         # projection factor 2 (xLSTM paper)
+    h = cfg.n_heads
+    hd = d_in // h
+    ks = jax.random.split(key, 8)
+
+    def blockdiag(key):                  # per-head projection (xLSTM paper)
+        sub = jax.random.split(key, h)
+        return jnp.stack([dense_init(k, hd, hd) for k in sub])  # (H, hd, hd)
+
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * d_in),
+        "wq": blockdiag(ks[1]),
+        "wk": blockdiag(ks[2]),
+        "wv": blockdiag(ks[3]),
+        "wi": dense_init(ks[4], d_in, h, dtype=jnp.float32),
+        "wf": dense_init(ks[5], d_in, h, dtype=jnp.float32),
+        "wo_gate": blockdiag(ks[6]),
+        "down_proj": dense_init(ks[7], d_in, d),
+    }
+
+
+def mlstm_block(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    state: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """mLSTM: per-head matrix memory C (hd x hd) with exponential gating.
+
+    Recurrence (xLSTM eq. 19-27, stabilized):
+      C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+      h_t = (C_t q_t) / max(|n_t^T q_t|, 1)
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    up = x @ p["up_proj"]
+    xm, z = jnp.split(up, 2, axis=-1)                   # (B,S,d_in)
+    d_in = xm.shape[-1]
+    hd = d_in // h
+
+    xh = xm.reshape(b, s, h, hd)
+
+    def headproj(w):                     # block-diagonal per-head matmul
+        return jnp.einsum("bshd,hde->bhse", xh, w)      # (B,H,S,hd)
+
+    q = headproj(p["wq"]) / jnp.sqrt(hd)
+    k = headproj(p["wk"])
+    v = headproj(p["wv"])
+    i_pre = (xm @ p["wi"]).swapaxes(1, 2).astype(jnp.float32)   # (B,H,S)
+    f_pre = (xm @ p["wf"]).swapaxes(1, 2).astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n, m = carry                                  # (B,H,hd,hd) etc.
+        q_t, k_t, v_t, i_t, f_t = inp
+        log_f = -jax.nn.softplus(-f_t)                   # log sigmoid
+        m_new = jnp.maximum(log_f + m, i_t)
+        i_g = jnp.exp(i_t - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c = f_g[..., None, None] * c + i_g[..., None, None] * (
+            v_t[..., :, None] * k_t[..., None, :])
+        c = constrain(c, [(None, None, "model", None)])  # shard the memory
+        n = f_g[..., None] * n + i_g[..., None] * k_t
+        num = jnp.einsum("bhvk,bhk->bhv", c, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)), 1.0)
+        return (c, n, m_new), num / den[..., None]
+
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.zeros((b, h), jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+    (cT, nT, mT), ys = chunked_scan(
+        step, (c0, n0, m0),
+        (q.swapaxes(0, 2).swapaxes(1, 2).astype(jnp.float32),
+         k.swapaxes(0, 2).swapaxes(1, 2).astype(jnp.float32),
+         v.swapaxes(0, 2).swapaxes(1, 2).astype(jnp.float32),
+         i_pre.swapaxes(0, 2).swapaxes(1, 2),
+         f_pre.swapaxes(0, 2).swapaxes(1, 2)),
+    )
+    # ys: (S, B, H, hd) -> (B, S, d_in)
+    y = ys.swapaxes(0, 1).reshape(b, s, d_in).astype(x.dtype)
+    og = jnp.einsum("bshd,hde->bshe", xh, p["wo_gate"]).reshape(b, s, d_in)
+    y = y * jax.nn.silu(og)
+    out = (y * jax.nn.silu(z)) @ p["down_proj"]
+    return out, {"c": cT, "n": nT, "m": mT}
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> Params:
+    d_in = 2 * cfg.d_model
+    h = cfg.n_heads
+    hd = d_in // h
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+def init_slstm(cfg: ArchConfig, key) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": dense_init(ks[0], d, d),
+        "wi": dense_init(ks[1], d, d, dtype=jnp.float32),
+        "wf": dense_init(ks[2], d, d, dtype=jnp.float32),
+        "wo": dense_init(ks[3], d, d, dtype=jnp.float32),
+        "r": dense_init(ks[4], d, d),     # recurrent mix of h_{t-1}
+        "out_proj": dense_init(ks[5], d, d),
+    }
+
+
+def slstm_block(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    state: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """sLSTM: scalar memory with exponential input gate (stabilized)."""
+    b, s, d = x.shape
+    z_in = (x @ p["wz"]).astype(jnp.float32)
+    i_in = (x @ p["wi"]).astype(jnp.float32)
+    f_in = (x @ p["wf"]).astype(jnp.float32)
+    o_in = (x @ p["wo"]).astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n, m, h_prev = carry
+        z_t, i_t, f_t, o_t = inp
+        rec = (h_prev.astype(x.dtype) @ p["r"]).astype(jnp.float32)
+        z = jnp.tanh(z_t + rec)
+        log_f = -jax.nn.softplus(-(f_t))
+        m_new = jnp.maximum(log_f + m, i_t)
+        i_g = jnp.exp(i_t - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c = f_g * c + i_g * z
+        c = constrain(c, [(None, "model")])
+        n = f_g * n + i_g
+        h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h), h
+
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        carry0 = (zeros, zeros, zeros, zeros)
+    else:
+        carry0 = (state["c"], state["n"], state["m"], state["h"])
+    carryT, ys = chunked_scan(
+        step, carry0,
+        (z_in.swapaxes(0, 1), i_in.swapaxes(0, 1),
+         f_in.swapaxes(0, 1), o_in.swapaxes(0, 1)),
+    )
+    y = ys.swapaxes(0, 1).astype(x.dtype) @ p["out_proj"]
+    cT, nT, mT, hT = carryT
+    return y, {"c": cT, "n": nT, "m": mT, "h": hT}
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> Params:
+    d = cfg.d_model
+    zeros = jnp.zeros((batch, d), jnp.float32)
+    return {"c": zeros, "n": zeros, "m": zeros, "h": zeros}

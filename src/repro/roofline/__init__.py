@@ -1,0 +1,4 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import (collective_bytes, roofline_terms, model_flops,
+                                     active_param_count, RooflineTerms,
+                                     PEAK_FLOPS, HBM_BW, ICI_BW)

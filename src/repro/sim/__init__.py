@@ -1,0 +1,22 @@
+"""Instruction-driven PPA simulator — the paper's evaluation vehicle."""
+
+from repro.sim.hw_config import HWConfig, GROWConfig, sram_pj_per_byte
+from repro.sim.blockstats import BlockStats, compute_block_stats, alg2_best_k
+from repro.sim.flexvector_sim import SimResult, simulate_flexvector
+from repro.sim.grow_sim import simulate_grow
+from repro.sim.area import flexvector_area, grow_area, AreaReport
+
+__all__ = [
+    "HWConfig",
+    "GROWConfig",
+    "sram_pj_per_byte",
+    "BlockStats",
+    "compute_block_stats",
+    "alg2_best_k",
+    "SimResult",
+    "simulate_flexvector",
+    "simulate_grow",
+    "flexvector_area",
+    "grow_area",
+    "AreaReport",
+]

@@ -1,0 +1,272 @@
+"""Vectorized per-tile statistics for the instruction-driven simulator.
+
+A *tile* is a ``tile x tile`` sub-matrix of the (edge-cut permuted) sparse
+operand (paper Fig 5: 16 sparse rows x the <=16 dense rows resident in the
+VRFs); the coarse-grained ISA processes one tile at a time, and the
+inner-product dataflow at the DRAM-buffer level accumulates a row panel's
+output across its tiles (Section V-B).  Reddit/Yelp carry >10M nonzeros,
+so the simulator never materializes per-tile Python objects; everything
+below is O(nnz) sorted-array passes (numpy ``reduceat`` group-bys):
+
+* per-nnz: owning tile, row-in-tile, and the *column rank* — the position
+  of the nonzero's column among the tile's columns sorted by CNZ
+  descending (Algorithm 2's ``Sorted_CNZ``; rank < k  <=>  VRF fixed-region
+  hit);
+* per-(tile,row): RNZ and, for any candidate k, the miss count;
+* per-tile: nnz, distinct columns, and the Algorithm 2 ``best_k`` under
+  single/double VRF modes;
+* per row-panel group: distinct dense-row loads (DRAM traffic at the
+  buffer level, where the m-buffered Rows-to-Compute region amortizes
+  loads across tiles).
+
+Equivalence with the per-tile reference path (`repro.core`) is asserted by
+property tests on small graphs (tests/test_sim_blockstats.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.sparse_formats import CSRMatrix
+
+
+def _ceil_div_arr(a: np.ndarray, b) -> np.ndarray:
+    return -(-a // b)
+
+
+@dataclasses.dataclass
+class BlockStats:
+    """Sorted-array view of the tile decomposition of one sparse operand.
+
+    All per-nnz arrays are ordered by (tile, row-in-tile, col-rank).
+    """
+
+    tile: int
+    n_rows: int
+    n_cols: int
+    nnz: int
+
+    # per-nnz (sorted by tile, then row-in-tile, then col rank)
+    nz_block: np.ndarray      # (nnz,) int32 tile id
+    nz_col_rank: np.ndarray   # (nnz,) int32 CNZ-desc rank of the column
+    nz_col: np.ndarray        # (nnz,) int32 global column
+    nz_rb: np.ndarray         # (nnz,) int32 row-panel (row // tile)
+
+    # per-(tile,row) groups (contiguous in the nnz order)
+    br_start: np.ndarray      # (n_br,) int64 offsets into nnz arrays
+    br_block: np.ndarray      # (n_br,) int32
+    br_rnz: np.ndarray        # (n_br,) int32
+
+    # per-tile groups (contiguous in the (tile,row) order)
+    b_start: np.ndarray       # (n_b,) int64 offsets into br arrays
+    b_nnz_start: np.ndarray   # (n_b,) int64 offsets into nnz arrays
+    b_nnz: np.ndarray         # (n_b,) int64
+    b_ncols: np.ndarray       # (n_b,) int32 distinct columns touched
+    b_nrows: np.ndarray       # (n_b,) int32 rows with nonzeros
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.b_nnz)
+
+    # ------------------------------------------------------------------
+    def br_reduce(self, values: np.ndarray, how: str = "sum") -> np.ndarray:
+        """Reduce a per-nnz array into per-(tile,row) groups."""
+        op = {"sum": np.add, "max": np.maximum}[how]
+        return op.reduceat(values, self.br_start)
+
+    def b_reduce(self, values_br: np.ndarray, how: str = "sum") -> np.ndarray:
+        """Reduce a per-(tile,row) array into per-tile groups."""
+        op = {"sum": np.add, "max": np.maximum}[how]
+        return op.reduceat(values_br, self.b_start)
+
+    # ------------------------------------------------------------------
+    def miss_per_block_row(self, k) -> np.ndarray:
+        """Per-(tile,row) miss count when tile b pins its top-k[b] columns.
+
+        ``k`` may be scalar or per-tile; a nonzero hits iff its column rank
+        is below the tile's k.
+        """
+        k_nz = k if np.isscalar(k) else np.asarray(k)[self.nz_block]
+        hit = (self.nz_col_rank < k_nz).astype(np.int32)
+        return self.br_rnz - self.br_reduce(hit, "sum")
+
+    def br_block_rank(self) -> np.ndarray:
+        """Dense per-(tile,row) tile index."""
+        ids = np.zeros(len(self.br_rnz), dtype=np.int64)
+        ids[self.b_start[1:]] = 1
+        return np.cumsum(ids)
+
+    # ------------------------------------------------------------------
+    def top2_per_block(self, values_br: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(max, 2nd max) of a per-(tile,row) array within each tile.
+
+        Second max is 0 for single-row tiles.  O(n_br), no sorting: the
+        first in-segment occurrence of the max is masked out via a
+        segmented-cumsum trick, then a second segmented max runs.
+        """
+        m0 = self.b_reduce(values_br, "max")
+        seg = self.br_block_rank()
+        is_max = values_br == m0[seg]
+        c = np.cumsum(is_max)
+        base = np.zeros(len(m0), dtype=np.int64)
+        base[1:] = c[self.b_start[1:] - 1]
+        first_occ = is_max & ((c - base[seg]) == 1)
+        v2 = np.where(first_occ, -1, values_br)
+        m1 = self.b_reduce(v2, "max")
+        return m0, np.maximum(m1, 0)
+
+    # ------------------------------------------------------------------
+    def unique_group_loads(self, group: int) -> int:
+        """Distinct (panel-group, column) pairs: DRAM dense-row loads when
+        ``group`` consecutive row panels share the multi-buffered
+        Rows-to-Compute region (Fig 12b amortization)."""
+        g = self.nz_rb.astype(np.int64) // max(group, 1)
+        key = g * (self.n_cols + 1) + self.nz_col
+        return int(len(np.unique(key)))
+
+
+def compute_block_stats(adj: CSRMatrix, tile: int) -> BlockStats:
+    """Decompose a CSR operand into `tile` x `tile` tiles (vectorized)."""
+    rnz = adj.row_nnz()
+    rows = np.repeat(np.arange(adj.rows, dtype=np.int64), rnz)
+    cols = adj.indices.astype(np.int64)
+    n_cb = -(-adj.cols // tile)
+    panel = (rows // tile) * n_cb + cols // tile   # tile id (row-major)
+
+    # ---- pass 1: per-(tile,col) counts -> column ranks ---------------
+    order1 = np.lexsort((cols, panel))
+    pk1 = panel[order1]
+    co1 = cols[order1]
+    entry_new = np.ones(len(pk1), dtype=bool)
+    if len(pk1):
+        entry_new[1:] = (pk1[1:] != pk1[:-1]) | (co1[1:] != co1[:-1])
+    entry_id = np.cumsum(entry_new) - 1
+    entry_starts = np.flatnonzero(entry_new)
+    entry_panel = pk1[entry_starts]
+    entry_count = np.diff(np.append(entry_starts, len(pk1)))
+    # rank entries within tile by count desc; counts <= tile rows
+    assert tile <= 1024, "rank key assumes tile <= 1024"
+    rank_key = entry_panel * 2048 + (tile - entry_count)
+    rorder = np.argsort(rank_key, kind="stable")
+    pan_sorted = entry_panel[rorder]
+    pan_new = np.ones(len(pan_sorted), dtype=bool)
+    if len(pan_sorted):
+        pan_new[1:] = pan_sorted[1:] != pan_sorted[:-1]
+    pan_first_pos = np.flatnonzero(pan_new)
+    pan_of_entry_sorted = np.cumsum(pan_new) - 1
+    rank_sorted = np.arange(len(rorder)) - pan_first_pos[pan_of_entry_sorted]
+    entry_rank = np.empty(len(rorder), dtype=np.int32)
+    entry_rank[rorder] = rank_sorted.astype(np.int32)
+    col_rank_1 = entry_rank[entry_id]
+    col_rank = np.empty(len(order1), dtype=np.int32)
+    col_rank[order1] = col_rank_1
+    b_keys_c, b_ncols = np.unique(entry_panel, return_counts=True)
+
+    # ---- pass 2: sort by (tile, row, col_rank) ------------------------
+    r_in = (rows % tile).astype(np.int16)
+    order2 = np.lexsort((col_rank, r_in, panel))
+    nz_pk = panel[order2]
+    nz_ri = r_in[order2]
+    nz_rank = col_rank[order2]
+    nz_col = cols[order2].astype(np.int32)
+    nz_rb = (rows[order2] // tile).astype(np.int32)
+
+    br_new = np.ones(len(nz_pk), dtype=bool)
+    if len(nz_pk):
+        br_new[1:] = (nz_pk[1:] != nz_pk[:-1]) | (nz_ri[1:] != nz_ri[:-1])
+    br_start = np.flatnonzero(br_new).astype(np.int64)
+    br_panel_key = nz_pk[br_start]
+    br_rnz = np.diff(np.append(br_start, len(nz_pk))).astype(np.int32)
+
+    b_new = np.ones(len(br_panel_key), dtype=bool)
+    if len(br_panel_key):
+        b_new[1:] = br_panel_key[1:] != br_panel_key[:-1]
+    b_start = np.flatnonzero(b_new).astype(np.int64)
+    b_keys = br_panel_key[b_new]
+    b_nrows = np.diff(np.append(b_start, len(br_panel_key))).astype(np.int32)
+    b_nnz_start = br_start[b_start]
+    b_nnz = np.diff(np.append(b_nnz_start, len(nz_pk))).astype(np.int64)
+    assert np.array_equal(b_keys, b_keys_c)
+
+    marks = np.zeros(len(nz_pk), dtype=np.int32)
+    marks[b_nnz_start] = 1
+    nz_block = (np.cumsum(marks) - 1).astype(np.int32)
+
+    return BlockStats(
+        tile=tile,
+        n_rows=adj.rows,
+        n_cols=adj.cols,
+        nnz=adj.nnz,
+        nz_block=nz_block,
+        nz_col_rank=nz_rank,
+        nz_col=nz_col,
+        nz_rb=nz_rb,
+        br_start=br_start,
+        br_block=nz_block[br_start],
+        br_rnz=br_rnz,
+        b_start=b_start,
+        b_nnz_start=b_nnz_start,
+        b_nnz=b_nnz,
+        b_ncols=b_ncols.astype(np.int32),
+        b_nrows=b_nrows,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2, vectorized across all tiles
+# ---------------------------------------------------------------------------
+
+
+def alg2_best_k(
+    stats: BlockStats,
+    tau: int,
+    vrf_depth: int,
+    mode: str = "double",
+    pct: float = 0.5,
+) -> np.ndarray:
+    """Per-tile Algorithm 2 best_k, vectorized.
+
+    Faithful to the published greedy: start at k0 = ceil(tau*pct); if k0
+    fits, climb while consecutive k fit; else descend to the first fitting
+    k.  Fit uses the post-vertex-cut per-sub-row miss bound
+    ceil(miss / ceil(RNZ/tau)) and requires k + m0 (+ m1 in double mode)
+    <= vrf_depth.
+    """
+    n_b = stats.n_blocks
+    k_splits = _ceil_div_arr(stats.br_rnz, tau)
+
+    k0 = int(np.ceil(tau * pct))
+    k0 = max(1, min(k0, vrf_depth))
+    kmax = min(vrf_depth, int(stats.b_ncols.max()) if n_b else 0)
+    if kmax < 1:
+        return np.zeros(n_b, dtype=np.int32)
+
+    fit = np.zeros((kmax + 1, n_b), dtype=bool)
+    fit[0] = True
+    rank32 = stats.nz_col_rank
+    for k in range(1, kmax + 1):
+        hits = np.add.reduceat((rank32 < k).astype(np.int32), stats.br_start)
+        miss = stats.br_rnz - hits
+        v = _ceil_div_arr(miss, k_splits)
+        m0, m1 = stats.top2_per_block(v)
+        need = k + m0 + (m1 if mode == "double" else 0)
+        fit[k] = (need <= vrf_depth) & (k <= stats.b_ncols)
+
+    k0 = min(k0, kmax)
+    # climb-up from k0: largest j >= k0 with fit[k0..j] all True
+    alive = fit[k0].copy()
+    best_up = np.where(alive, k0, 0)
+    for k in range(k0 + 1, kmax + 1):
+        alive &= fit[k]
+        best_up = np.where(alive, k, best_up)
+    # descend: first fitting k scanning k0-1 .. 1
+    best_down = np.zeros(n_b, dtype=np.int32)
+    undecided = ~fit[k0]
+    for k in range(k0 - 1, 0, -1):
+        sel = undecided & fit[k] & (best_down == 0)
+        best_down[sel] = k
+    best = np.where(fit[k0], best_up, best_down)
+    return np.minimum(best, stats.b_ncols).astype(np.int32)

@@ -1,0 +1,234 @@
+"""Instruction-driven cycle/energy simulator for FlexVector.
+
+Executes the coarse-grained ISA program (Section III-D) over the tile
+statistics, with the paper's overlap semantics:
+
+* **m-buffering (DRAM <-> buffer):** with m >= 2 the DRAM stream and the
+  buffer->VRF compute pipeline overlap (Fig 8c); the pass latency is the
+  max of the two.  m = 1 serializes them.  Dense-row loads are
+  *burst-granular*: grouping m tiles in the Rows-to-Compute region lets
+  row fetches coalesce into shared DRAM bursts ("amortizing burst
+  transfers across more tiles", Section VI-E2) — locality the inter-tile
+  edge-cut creates.
+* **double-VRF (buffer <-> VRF):** MV_Dyn of the next sub-row overlaps CMP
+  of the current one (Fig 7c): per sub-row cost max(c_mv*miss, rnz) versus
+  the single-VRF serialization (c_mv*miss + rnz).
+* **flexible k (Algorithm 2):** the per-tile fixed region converts the k
+  hottest columns' accesses from MV_Dyn misses into hits, at a per-tile
+  cost of c_mv*k MV_Fixed cycles.
+* **vertex-cut:** bounds sub-row size by tau; without it, rows wider than
+  the dynamic region are processed in ceil(RNZ/cap) refill chunks with
+  unbalanced misses.
+
+The feature dimension is covered in ceil(F / f_tile) passes
+(f_tile = VLEN / elem bits — one VRF row holds one dense-row segment).
+The sparse operand is decoded once per tile (CAL_IDX) and stays in the
+Sparse Buffer across the tile's feature passes; dense segments re-stream
+per pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.sparse_formats import CSRMatrix
+from repro.sim import hw_config as hc
+from repro.sim.area import flexvector_area
+from repro.sim.blockstats import (
+    BlockStats,
+    _ceil_div_arr,
+    alg2_best_k,
+    compute_block_stats,
+)
+from repro.sim.hw_config import HWConfig
+
+DRAM_BURST_BYTES = 32  # HBM minimum access atom
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    name: str
+    cycles: float
+    time_s: float
+    dram_bytes: float
+    dram_accesses: float          # burst-granular access count (Fig 12b)
+    vrf_or_cache_misses: float    # dense-row miss count (Fig 12c)
+    energy_pj: float
+    energy_breakdown_pj: Dict[str, float]
+    area_um2: float
+    instr_count: int
+    fine_instr_count: int
+    n_passes: int
+    compute_cycles: float = 0.0
+    dram_cycles: float = 0.0
+    stall_cycles: float = 0.0
+    per_block_k: Optional[np.ndarray] = None
+
+    @property
+    def energy_j(self) -> float:
+        return self.energy_pj * 1e-12
+
+
+def _per_pass_compute_cycles(
+    stats: BlockStats, hw: HWConfig, k_b: np.ndarray
+) -> Dict[str, float]:
+    """Per-pass VRF-level pipeline cycles + miss/MV statistics."""
+    miss_br = stats.miss_per_block_row(k_b)
+
+    if hw.vertex_cut:
+        k_splits = _ceil_div_arr(stats.br_rnz, hw.tau)
+        sub_rnz = _ceil_div_arr(stats.br_rnz, k_splits)
+        sub_miss = _ceil_div_arr(miss_br, k_splits)      # balanced (Alg 1)
+    else:
+        cap = max(hw.dyn_half_depth - (0 if hw.double_vrf else k_b.max()), 1)
+        k_splits = _ceil_div_arr(stats.br_rnz, cap)
+        sub_rnz = _ceil_div_arr(stats.br_rnz, k_splits)
+        sub_miss = np.minimum(miss_br, cap)              # worst chunk
+
+    # one dispatch cycle per MV_Dyn instruction (address generation from the
+    # CAL_IDX one-hot bitmap); sub-rows fully resident in the fixed region
+    # skip the MV_Dyn entirely — the cycle-level win of +Flexible k.
+    mv_issue = (sub_miss > 0).astype(np.int64) * k_splits
+
+    if hw.double_vrf:
+        # MV_Dyn(next) overlaps CMP(current): per-row K * max(mv, cmp)
+        row_cycles = k_splits * np.maximum(hw.c_mv * sub_miss, sub_rnz) + mv_issue
+    else:
+        row_cycles = hw.c_mv * miss_br + stats.br_rnz + mv_issue
+
+    comp = float(row_cycles.astype(np.int64).sum())
+    comp += float(stats.n_blocks) * hw.c_setup + hw.c_mv * float(k_b.sum())
+    return {
+        "comp_pass": comp,
+        "misses": float(miss_br.astype(np.int64).sum()),
+        "subrows": float(k_splits.astype(np.int64).sum()),
+    }
+
+
+def _dram_traffic(
+    stats: BlockStats, hw: HWConfig, n_passes: int
+) -> Dict[str, float]:
+    """Total DRAM traffic under burst-granular, m-grouped dense loads."""
+    seg = hw.row_seg_bytes
+    rows_per_burst = max(DRAM_BURST_BYTES // seg, 1)
+    g = stats.nz_rb.astype(np.int64) // max(hw.m, 1)
+    burst_key = g * (stats.n_cols + 1) + stats.nz_col // rows_per_burst
+    bursts = float(len(np.unique(burst_key)))
+    load_rows = float(stats.unique_group_loads(hw.m))
+
+    # segments wider than the HBM atom transfer seg bytes per row; narrow
+    # segments share 32B atoms (coalesced across rows within a group)
+    if seg >= DRAM_BURST_BYTES:
+        load_bytes_pass = load_rows * seg
+        bursts = load_rows * (seg // DRAM_BURST_BYTES)
+    else:
+        load_bytes_pass = bursts * DRAM_BURST_BYTES
+    sparse_bytes = float(
+        stats.nnz * (hw.csr_val_bytes + hw.csr_idx_bytes)
+        + (stats.n_rows + 1) * hw.csr_ptr_bytes
+    )
+    # outputs stream on-chip into the next phase (Section V-B Temp/Result
+    # regions; the GCN layer's X(l+1) feeds the next combination SpMM), so
+    # stores are excluded from DRAM traffic for both designs.
+    store_bytes_pass = float(stats.n_rows * seg)
+    return {
+        "bytes": load_bytes_pass * n_passes + sparse_bytes,
+        "bytes_pass": load_bytes_pass + sparse_bytes / n_passes,
+        "accesses": bursts * n_passes + sparse_bytes / DRAM_BURST_BYTES,
+        "load_rows": load_rows,
+        "load_bytes_pass": load_bytes_pass,
+        "sparse_bytes": sparse_bytes,
+        "store_bytes_pass": store_bytes_pass,
+    }
+
+
+def simulate_flexvector(
+    adj: CSRMatrix,
+    feature_dim: int,
+    hw: HWConfig = HWConfig(),
+    stats: Optional[BlockStats] = None,
+    name: str = "flexvector",
+) -> SimResult:
+    if stats is None:
+        stats = compute_block_stats(adj, hw.tile)
+
+    # --- fixed-region selection (Config / MV_Fixed) ---------------------
+    if hw.flexible_k and hw.vertex_cut:
+        k_b = alg2_best_k(
+            stats, hw.tau, hw.vrf_depth, mode=hw.effective_mode(), pct=hw.pct
+        )
+    else:
+        k_b = np.minimum(
+            np.full(stats.n_blocks, hw.static_k, dtype=np.int32),
+            stats.b_ncols,
+        )
+
+    comp = _per_pass_compute_cycles(stats, hw, k_b)
+    n_passes = int(-(-feature_dim // hw.f_tile))
+    dram = _dram_traffic(stats, hw, n_passes)
+
+    comp_pass = comp["comp_pass"]
+    dram_pass = dram["bytes_pass"] / hw.dram_bytes_per_cycle
+    if hw.m >= 2:
+        pass_cycles = max(comp_pass, dram_pass) + hw.dram_latency_cycles
+    else:
+        pass_cycles = comp_pass + dram_pass + hw.dram_latency_cycles
+    cycles = pass_cycles * n_passes
+
+    # --- instruction counts (Section VI-F) ------------------------------
+    coarse = int(((5 + 1) * stats.n_blocks + 2 * comp["subrows"]) * n_passes)
+    fine = int(
+        ((5 + 1) * stats.n_blocks + comp["misses"] + stats.nnz) * n_passes
+    )
+
+    # --- energy ----------------------------------------------------------
+    seg = hw.row_seg_bytes
+    misses = comp["misses"]
+    k_total = float(k_b.sum())
+    out_rows = float(stats.b_nrows.sum())
+
+    e_db = hc.sram_pj_per_byte(hw.dense_buffer_bytes)
+    e_sb = hc.sram_pj_per_byte(hw.sparse_buffer_bytes)
+    db_bytes_pass = (
+        dram["load_bytes_pass"]                 # DRAM -> buffer writes
+        + (misses + k_total) * seg              # MV reads buffer -> VRF
+        + 3.0 * out_rows * seg                  # result wr + temp rd/wr
+    )
+    sb_bytes = 2.0 * dram["sparse_bytes"]       # stream write + decode read
+    vrf_bytes_pass = (misses + k_total) * seg + float(stats.nnz) * seg
+    mac_ops_pass = float(stats.nnz) * hw.f_tile
+    area = flexvector_area(hw)
+
+    breakdown = {
+        "dram": dram["bytes"] * hc.PJ_PER_BYTE_DRAM,
+        "dense_buffer": db_bytes_pass * n_passes * e_db,
+        "sparse_buffer": sb_bytes * e_sb,
+        "vrf": vrf_bytes_pass * n_passes * hc.VRF_PJ_PER_BYTE,
+        "mac": mac_ops_pass * n_passes * hc.MAC_PJ_INT8,
+    }
+    time_s = cycles / hw.freq_hz
+    leak_mw = hc.LEAK_MW_PER_MM2 * area.total_um2 * 1e-6
+    breakdown["leakage"] = leak_mw * 1e-3 * time_s * 1e12  # W*s -> pJ
+    energy = float(sum(breakdown.values()))
+
+    return SimResult(
+        name=name,
+        cycles=float(cycles),
+        time_s=time_s,
+        dram_bytes=dram["bytes"],
+        dram_accesses=dram["accesses"],
+        vrf_or_cache_misses=misses * n_passes,
+        energy_pj=energy,
+        energy_breakdown_pj=breakdown,
+        area_um2=area.total_um2,
+        instr_count=coarse,
+        fine_instr_count=fine,
+        n_passes=n_passes,
+        compute_cycles=comp_pass * n_passes,
+        dram_cycles=dram_pass * n_passes,
+        stall_cycles=0.0,
+        per_block_k=k_b,
+    )

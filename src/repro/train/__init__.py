@@ -1,0 +1,43 @@
+"""Training substrate: optimizer, checkpointing, fault-tolerant loop."""
+
+from repro.train.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    lr_at,
+)
+from repro.train.compression import (
+    compressed_psum,
+    compression_ratio,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.train import checkpoint
+from repro.train.trainer import (
+    StepFailure,
+    TrainerConfig,
+    TrainerReport,
+    run,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "lr_at",
+    "compressed_psum",
+    "compression_ratio",
+    "quantize_int8",
+    "dequantize_int8",
+    "checkpoint",
+    "StepFailure",
+    "TrainerConfig",
+    "TrainerReport",
+    "run",
+]

@@ -1,0 +1,168 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Design (scaled down from multi-host to this single-process container, same
+code path):
+
+* every checkpoint is a directory ``step_<N>/`` holding one ``.npz`` shard
+  per device plus a ``meta.json`` (pytree structure, shapes, mesh shape);
+* writes go to ``step_<N>.tmp/`` and are atomically renamed — a crash
+  mid-write never corrupts the latest complete checkpoint (restart safety);
+* ``save_async`` snapshots arrays to host memory synchronously (cheap) and
+  writes in a background thread so the train loop is not blocked;
+* ``restore`` accepts a *different* device mesh than the one that saved:
+  shards are concatenated logically and re-sharded to the new topology —
+  the elastic-rescale path (DESIGN.md: node failures shrink the mesh).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree) -> List[Tuple[str, np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+def checkpoint_paths(root: str) -> List[Tuple[int, str]]:
+    """(step, path) of complete checkpoints, ascending."""
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            full = os.path.join(root, name)
+            if os.path.exists(os.path.join(full, "meta.json")):
+                out.append((int(name.split("_")[1]), full))
+    return sorted(out)
+
+
+def latest_step(root: str) -> Optional[int]:
+    cps = checkpoint_paths(root)
+    return cps[-1][0] if cps else None
+
+
+def save(
+    root: str,
+    step: int,
+    tree: PyTree,
+    shards: int = 1,
+    keep: int = 3,
+    extra_meta: Optional[Dict] = None,
+) -> str:
+    """Synchronous sharded save with atomic rename."""
+    os.makedirs(root, exist_ok=True)
+    tmp = os.path.join(root, f"step_{step}.tmp")
+    final = os.path.join(root, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves = _flatten_with_paths(tree)
+    meta = {
+        "step": step,
+        "shards": shards,
+        "keys": [k for k, _ in leaves],
+        "shapes": {k: list(v.shape) for k, v in leaves},
+        "dtypes": {k: str(v.dtype) for k, v in leaves},
+    }
+    if extra_meta:
+        meta["extra"] = extra_meta
+    # shard along leading axis where possible; shard 0 carries scalars
+    for s in range(shards):
+        payload = {}
+        for k, v in leaves:
+            if v.ndim >= 1 and v.shape[0] >= shards:
+                payload[k] = np.array_split(v, shards, axis=0)[s]
+            elif s == 0:
+                payload[k] = v
+        np.savez(os.path.join(tmp, f"shard_{s}.npz"), **payload)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, final)
+    _gc(root, keep)
+    return final
+
+
+_PENDING: List[threading.Thread] = []
+
+
+def save_async(
+    root: str, step: int, tree: PyTree, shards: int = 1, keep: int = 3,
+    extra_meta: Optional[Dict] = None,
+) -> threading.Thread:
+    """Snapshot to host now, write in the background."""
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    t = threading.Thread(
+        target=save, args=(root, step, host_tree, shards, keep, extra_meta),
+        daemon=True,
+    )
+    t.start()
+    _PENDING.append(t)
+    return t
+
+
+def wait_pending() -> None:
+    for t in list(_PENDING):
+        t.join()
+        _PENDING.remove(t)
+
+
+def restore(
+    root: str,
+    like: PyTree,
+    step: Optional[int] = None,
+) -> Tuple[PyTree, int]:
+    """Restore into the structure of ``like`` (elastic: shard count may
+    differ from the saving run)."""
+    cps = checkpoint_paths(root)
+    if not cps:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    if step is None:
+        step, path = cps[-1]
+    else:
+        match = [p for s, p in cps if s == step]
+        if not match:
+            raise FileNotFoundError(f"step {step} not found under {root}")
+        path = match[0]
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    buf: Dict[str, List[np.ndarray]] = {k: [] for k in meta["keys"]}
+    for s in range(meta["shards"]):
+        with np.load(os.path.join(path, f"shard_{s}.npz")) as z:
+            for k in z.files:
+                buf[k].append(z[k])
+    full = {
+        k: (np.concatenate(v, axis=0) if len(v) > 1 else v[0])
+        for k, v in buf.items()
+    }
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for pth, leaf in flat:
+        key = "/".join(str(p) for p in pth)
+        if key not in full:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = full[key]
+        want = tuple(np.shape(leaf))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {want}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def _gc(root: str, keep: int) -> None:
+    cps = checkpoint_paths(root)
+    for _, path in cps[:-keep] if keep > 0 else []:
+        shutil.rmtree(path, ignore_errors=True)

@@ -1,0 +1,112 @@
+"""Optimizers + LR schedules (pure JAX, pytree-based, optax-free)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"  # cosine | linear | constant
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Warmup + cosine/linear decay schedule."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        t = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+                1 + jnp.cos(jnp.pi * t)
+            )
+        else:
+            decay = 1.0 - (1.0 - cfg.min_lr_ratio) * t
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def adamw_init(params: PyTree, dtype=jnp.float32) -> AdamWState:
+    """``dtype=bfloat16`` halves optimizer-state memory for the XXL
+    configs (the quantized-Adam production trick); fp32 is the default."""
+    zeros = lambda p: jnp.zeros_like(p, dtype=dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+) -> Tuple[PyTree, AdamWState, dict]:
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    if cfg.grad_clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (update + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), metrics

@@ -1,0 +1,106 @@
+"""Roofline machinery: HLO collective parsing + term arithmetic + shapes."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES, skip_reason
+from repro.roofline.analysis import (
+    RooflineTerms,
+    active_param_count,
+    collective_bytes,
+    model_flops,
+    roofline_terms,
+)
+
+HLO_SAMPLE = """
+  %all-gather = f32[1024,256]{1,0} all-gather(%x), channel_id=1
+  %fusion.1 = f32[64,64]{1,0} fusion(%all-gather), calls=%fused
+  %all-reduce.3 = bf16[128,64]{1,0} all-reduce(%dot.1), channel_id=3
+  %rs = f32[32]{0} reduce-scatter(%y), channel_id=4
+  %ag-start = (f32[8,8]{1,0}, f32[16,8]{1,0}) all-gather-start(%z)
+  %ag-done = f32[16,8]{1,0} all-gather-done(%ag-start)
+  %cp = u8[100]{0} collective-permute(%w), channel_id=9
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 1024 * 256 * 4 + (8 * 8 + 16 * 8) * 4
+    assert out["all-reduce"] == 128 * 64 * 2
+    assert out["reduce-scatter"] == 32 * 4
+    assert out["collective-permute"] == 100
+    # fusion referencing %all-gather and the -done op are not re-counted
+    assert out["op_counts"]["all-gather"] == 2
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(
+        flops_per_device=197e12,          # exactly 1 second of compute
+        bytes_per_device=819e9 / 2,       # 0.5 s of HBM
+        coll_bytes_per_device=50e9 / 4,   # 0.25 s of ICI
+        chips=256,
+        model_flops_total=197e12 * 256 * 0.5,
+    )
+    assert t.dominant == "compute"
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(0.5)
+    assert t.collective_s == pytest.approx(0.25)
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_active_params_moe():
+    cfg = get_config("mixtral-8x22b")
+    active = active_param_count(cfg)
+    total = cfg.param_count()
+    # top-2 of 8 experts: roughly 1/3 of total active (plus attention)
+    assert 0.2 < active / total < 0.45
+
+
+def test_model_flops_kinds():
+    cfg = get_config("internlm2-1.8b")
+    n = cfg.param_count()
+    train = model_flops(cfg, SHAPES["train_4k"])
+    assert train == pytest.approx(6 * n * 256 * 4096, rel=1e-6)
+    decode = model_flops(cfg, SHAPES["decode_32k"])
+    assert decode == pytest.approx(2 * n * 128, rel=1e-6)
+
+
+def test_skip_rules():
+    # pure full-attention archs skip long_500k
+    assert skip_reason(get_config("qwen3-8b"), SHAPES["long_500k"])
+    assert skip_reason(get_config("deepseek-v2-lite-16b"), SHAPES["long_500k"])
+    # sub-quadratic archs run it
+    for a in ("xlstm-1.3b", "jamba-1.5-large-398b", "mixtral-8x22b",
+              "h2o-danube-1.8b"):
+        assert skip_reason(get_config(a), SHAPES["long_500k"]) is None
+    # every arch runs the other three shapes
+    for a in ("qwen3-8b", "seamless-m4t-large-v2"):
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert skip_reason(get_config(a), SHAPES[s]) is None
+
+
+def test_sharding_plan_divisibility():
+    """Every spec the plan emits divides the mesh axes it names."""
+    import numpy as np
+
+    from repro.dist.sharding import ShardingPlan
+    from repro.models import lm
+
+    mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+    cfg = get_config("internlm2-1.8b")
+    shapes = jax.eval_shape(lambda: lm.init_lm(cfg, jax.random.PRNGKey(0)))
+    plan = ShardingPlan(mesh, fsdp=True)
+
+    def check(path, leaf):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        spec = plan.param_spec(name, np.shape(leaf))
+        for dim, axes in zip(np.shape(leaf), tuple(spec)):
+            if axes is None:
+                continue
+            names = axes if isinstance(axes, tuple) else (axes,)
+            size = int(np.prod([mesh.shape[n] for n in names]))
+            assert dim % size == 0, (np.shape(leaf), spec)
+
+    jax.tree_util.tree_map_with_path(check, shapes)

@@ -1,0 +1,149 @@
+"""Simulator invariants + paper-trend assertions (small datasets)."""
+
+import numpy as np
+import pytest
+
+from benchmarks.common import prepared_dataset
+from repro.sim import (
+    GROWConfig,
+    HWConfig,
+    compute_block_stats,
+    flexvector_area,
+    grow_area,
+    simulate_flexvector,
+    simulate_grow,
+)
+from repro.core import random_power_law_csr
+
+
+@pytest.fixture(scope="module")
+def cora():
+    return prepared_dataset("cora")
+
+
+def test_area_breakdown_matches_fig9():
+    """Default-config area lands on the paper's 39.43K um^2 +-10% with the
+    published component ordering (buffers dominate)."""
+    area = flexvector_area(HWConfig())
+    assert abs(area.total_um2 - 39430) / 39430 < 0.10
+    b = area.breakdown()
+    assert b["dense_buffer"] > b["vrf"] > b["mac_lanes"]
+    onchip = b["dense_buffer"] + b["sparse_buffer"] + b["vrf"]
+    assert 0.5 < onchip < 0.7  # paper: 59.9%
+
+
+def test_area_scales_with_buffers():
+    small = flexvector_area(HWConfig()).total_um2
+    big = flexvector_area(HWConfig(dense_buffer_bytes=512 * 1024)).total_um2
+    assert big > 40 * small  # paper: GROW-like-dagger >50x total area
+
+
+def test_flexvector_beats_grow_at_same_capacity(cora):
+    padj, stats, F = cora
+    gl = simulate_grow(padj, F, GROWConfig(m=6))
+    fv = simulate_flexvector(padj, F, HWConfig(m=6), stats=stats)
+    assert gl.cycles / fv.cycles > 1.5          # paper: 3.78x geomean
+    assert fv.energy_pj < gl.energy_pj          # paper: -40.5%
+    assert fv.dram_bytes < gl.dram_bytes        # paper: 3.0-8.6x fewer
+
+
+def test_multibuffering_helps(cora):
+    padj, stats, F = cora
+    m1 = simulate_flexvector(
+        padj, F, HWConfig(m=1, double_vrf=False, vrf_depth=16,
+                          vertex_cut=False, flexible_k=False), stats=stats)
+    m6 = simulate_flexvector(
+        padj, F, HWConfig(m=6, double_vrf=False, vrf_depth=16,
+                          vertex_cut=False, flexible_k=False), stats=stats)
+    assert m6.cycles < m1.cycles
+
+
+def test_double_vrf_helps(cora):
+    padj, stats, F = cora
+    single = simulate_flexvector(
+        padj, F, HWConfig(double_vrf=False, flexible_k=False), stats=stats)
+    double = simulate_flexvector(
+        padj, F, HWConfig(double_vrf=True, flexible_k=False), stats=stats)
+    assert double.cycles < single.cycles
+
+
+def test_flexible_k_reduces_misses(cora):
+    """Paper Fig 12c: k=0 gives 3.79-27.53x more VRF misses."""
+    padj, stats, F = cora
+    k0 = simulate_flexvector(
+        padj, F, HWConfig(flexible_k=False, static_k=0), stats=stats)
+    flex = simulate_flexvector(padj, F, HWConfig(flexible_k=True), stats=stats)
+    assert k0.vrf_or_cache_misses / flex.vrf_or_cache_misses > 1.5
+
+
+def test_grow_misses_decrease_with_buffer(cora):
+    padj, stats, F = cora
+    prev = None
+    for m in (1, 6, 64, 2273):
+        cap = int(2048 * m / 6)
+        r = simulate_grow(padj, F, GROWConfig(dense_buffer_bytes=cap, m=m))
+        if prev is not None:
+            assert r.vrf_or_cache_misses <= prev
+        prev = r.vrf_or_cache_misses
+
+
+def test_grow_large_buffer_wins_latency_loses_energy(cora):
+    """Paper Fig 12 at m=2273: GROW-like-dagger gets faster (near-zero
+    misses) while the energy balance shifts sharply toward the large SRAM."""
+    padj, stats, F = cora
+    cap = 512 * 1024
+    gl_big = simulate_grow(
+        padj, F, GROWConfig(dense_buffer_bytes=cap, m=2273), stats=stats
+    )
+    gl_small = simulate_grow(padj, F, GROWConfig(m=6), stats=stats)
+    assert gl_big.cycles < gl_small.cycles
+    assert gl_big.vrf_or_cache_misses < 0.5 * gl_small.vrf_or_cache_misses
+
+    def sram_share(r):
+        e = r.energy_breakdown_pj
+        return (e["dense_buffer"] + e["sparse_buffer"]) / r.energy_pj
+
+    assert sram_share(gl_big) > 3 * sram_share(gl_small)
+
+
+def test_coarse_isa_reduces_instructions(cora):
+    padj, stats, F = cora
+    fv = simulate_flexvector(padj, F, HWConfig(), stats=stats)
+    assert fv.instr_count < fv.fine_instr_count
+
+
+def test_vlen_sweep_trends():
+    """Paper Fig 13: wider VLEN -> faster + fewer instructions, with
+    diminishing returns; area grows with lanes + buffer width."""
+    adj = random_power_law_csr(512, 512, 8000, seed=0)
+    stats = compute_block_stats(adj, 16)
+    cycles, instrs, areas = [], [], []
+    for vlen in (64, 128, 512, 2048):
+        hw = HWConfig(vlen_bits=vlen,
+                      dense_buffer_bytes=2048 * vlen // 128)
+        r = simulate_flexvector(adj, 1024, hw, stats=stats)
+        cycles.append(r.cycles)
+        instrs.append(r.instr_count)
+        areas.append(r.area_um2)
+    assert cycles[0] > cycles[1] > cycles[2] >= cycles[3] * 0.98
+    assert instrs[0] > instrs[-1]
+    assert instrs[-1] < 0.1 * instrs[0]  # paper: 97% reduction at 2048b
+    assert areas[-1] > areas[0]
+
+
+def test_deeper_vrf_reduces_cycles():
+    adj = random_power_law_csr(256, 256, 6000, seed=1)
+    stats = compute_block_stats(adj, 16)
+    shallow = simulate_flexvector(adj, 256, HWConfig(vrf_depth=12, tau=6),
+                                  stats=stats)
+    deep = simulate_flexvector(adj, 256, HWConfig(vrf_depth=32, tau=6),
+                               stats=stats)
+    assert deep.cycles <= shallow.cycles
+    assert deep.vrf_or_cache_misses <= shallow.vrf_or_cache_misses
+
+
+def test_grow_area_comparable(cora):
+    """Paper: FlexVector area within ~5% of GROW-like at same buffers."""
+    fv = flexvector_area(HWConfig())
+    gl = grow_area(GROWConfig())
+    assert abs(fv.total_um2 - gl.total_um2) / gl.total_um2 < 0.15

@@ -1,0 +1,115 @@
+"""BlockStats (vectorized) must agree with a brute-force per-block reference."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import random_power_law_csr
+from repro.sim import alg2_best_k, compute_block_stats
+
+
+def _dense_blocks(adj, tile):
+    """Brute-force (block_id -> dense sub-matrix) for small graphs."""
+    d = adj.to_scipy().toarray()
+    n_rb = -(-d.shape[0] // tile)
+    n_cb = -(-d.shape[1] // tile)
+    blocks = {}
+    for rb in range(n_rb):
+        for cb in range(n_cb):
+            sub = d[rb * tile : (rb + 1) * tile, cb * tile : (cb + 1) * tile]
+            if (sub != 0).any():
+                blocks[rb * n_cb + cb] = sub != 0
+    return blocks
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(16, 120),
+    nnz=st.integers(5, 700),
+    seed=st.integers(0, 1000),
+)
+def test_blockstats_aggregates_match_bruteforce(n, nnz, seed):
+    adj = random_power_law_csr(n, n, nnz, seed=seed)
+    stats = compute_block_stats(adj, 16)
+    blocks = _dense_blocks(adj, 16)
+    assert stats.n_blocks == len(blocks)
+    want_nnz = [int(b.sum()) for _, b in sorted(blocks.items())]
+    want_ncols = [int(b.any(axis=0).sum()) for _, b in sorted(blocks.items())]
+    want_nrows = [int(b.any(axis=1).sum()) for _, b in sorted(blocks.items())]
+    assert stats.b_nnz.tolist() == want_nnz
+    assert stats.b_ncols.tolist() == want_ncols
+    assert stats.b_nrows.tolist() == want_nrows
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(16, 100),
+    nnz=st.integers(5, 500),
+    k=st.integers(0, 8),
+    seed=st.integers(0, 500),
+)
+def test_miss_counts_match_bruteforce(n, nnz, k, seed):
+    """Per-tile miss totals at fixed k == brute-force top-k CNZ hits."""
+    adj = random_power_law_csr(n, n, nnz, seed=seed)
+    stats = compute_block_stats(adj, 16)
+    miss_br = stats.miss_per_block_row(k)
+    per_tile = np.add.reduceat(miss_br, stats.b_start)
+    blocks = _dense_blocks(adj, 16)
+    for b, (_, mask) in enumerate(sorted(blocks.items())):
+        cnz = mask.sum(axis=0)
+        present = np.flatnonzero(cnz)
+        order = present[np.argsort(-cnz[present], kind="stable")]
+        top = set(order[:k].tolist())
+        miss_ref = sum(
+            int(sum(1 for c in np.flatnonzero(row) if c not in top))
+            for row in mask
+        )
+        assert per_tile[b] == miss_ref, (b, k)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(16, 80),
+    nnz=st.integers(10, 400),
+    tau=st.integers(2, 6),
+    depth=st.integers(4, 16),
+    mode=st.sampled_from(["single", "double"]),
+    seed=st.integers(0, 300),
+)
+def test_alg2_feasibility(n, nnz, tau, depth, mode, seed):
+    """Vectorized Algorithm 2 returns feasible k for every tile."""
+    adj = random_power_law_csr(n, n, nnz, seed=seed)
+    stats = compute_block_stats(adj, 16)
+    got = alg2_best_k(stats, tau, depth, mode=mode)
+    assert len(got) == stats.n_blocks
+    assert (got >= 0).all() and (got <= depth).all()
+    assert (got <= stats.b_ncols).all()
+    # feasibility: k + m0 (+m1) <= depth under the balanced-split bound
+    miss = stats.miss_per_block_row(got)
+    splits = -(-stats.br_rnz // tau)
+    v = -(-miss // splits)
+    m0, m1 = stats.top2_per_block(v)
+    need = got + m0 + (m1 if mode == "double" else 0)
+    feasible = need <= depth
+    assert (feasible | (got == 0)).all()
+
+
+def test_top2_per_block():
+    adj = random_power_law_csr(64, 64, 400, seed=11)
+    stats = compute_block_stats(adj, 16)
+    vals = stats.br_rnz.astype(np.int64)
+    m0, m1 = stats.top2_per_block(vals)
+    for b in range(stats.n_blocks):
+        lo = stats.b_start[b]
+        hi = stats.b_start[b + 1] if b + 1 < stats.n_blocks else len(vals)
+        seg = np.sort(vals[lo:hi])[::-1]
+        assert m0[b] == seg[0]
+        assert m1[b] == (seg[1] if len(seg) > 1 else 0)
+
+
+def test_unique_group_loads_monotone():
+    adj = random_power_law_csr(256, 256, 4000, seed=5)
+    stats = compute_block_stats(adj, 16)
+    loads = [stats.unique_group_loads(g) for g in (1, 2, 6, 16, 10_000)]
+    assert all(a >= b for a, b in zip(loads, loads[1:]))
+    # with everything in one group, loads == distinct columns used
+    assert loads[-1] == len(np.unique(adj.indices))

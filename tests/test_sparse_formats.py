@@ -1,0 +1,67 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CSRMatrix,
+    csr_to_ell,
+    ell_to_dense,
+    random_power_law_csr,
+)
+
+
+def test_csr_roundtrip_scipy():
+    mat = random_power_law_csr(50, 40, 300, seed=0)
+    again = CSRMatrix.from_scipy(mat.to_scipy())
+    assert np.array_equal(mat.indptr, again.indptr)
+    assert np.array_equal(mat.indices, again.indices)
+    assert np.allclose(mat.data, again.data)
+
+
+def test_row_col_nnz():
+    mat = random_power_law_csr(64, 64, 500, seed=1)
+    dense = mat.to_scipy().toarray()
+    assert np.array_equal(mat.row_nnz(), (dense != 0).sum(axis=1))
+    assert np.array_equal(mat.col_nnz(), (dense != 0).sum(axis=0))
+
+
+def test_csr_to_ell_matches_dense():
+    mat = random_power_law_csr(80, 80, 600, seed=2)
+    ell = csr_to_ell(mat)
+    assert ell.nnz == mat.nnz
+    np.testing.assert_allclose(
+        ell_to_dense(ell), mat.to_scipy().toarray(), rtol=1e-6
+    )
+
+
+def test_csr_to_ell_tau_too_small_raises():
+    mat = random_power_law_csr(30, 30, 400, seed=3)
+    max_rnz = int(mat.row_nnz().max())
+    with pytest.raises(ValueError):
+        csr_to_ell(mat, tau=max_rnz - 1)
+
+
+def test_ell_padding_rows():
+    mat = random_power_law_csr(10, 10, 30, seed=4)
+    ell = csr_to_ell(mat, pad_rows_to=8)
+    assert ell.padded_rows % 8 == 0
+    assert (ell.row_map[10:] == -1).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(4, 60),
+    cols=st.integers(4, 60),
+    nnz=st.integers(1, 250),
+    seed=st.integers(0, 10_000),
+)
+def test_block_occupancy_covers_all_nnz(rows, cols, nnz, seed):
+    mat = random_power_law_csr(rows, cols, nnz, seed=seed)
+    ell = csr_to_ell(mat)
+    occ = ell.block_occupancy(8, 8)
+    # every nonzero lives in an occupied block
+    for i in range(ell.padded_rows):
+        for t in range(ell.tau):
+            c = ell.cols[i, t]
+            if c >= 0:
+                assert occ[i // 8, c // 8]

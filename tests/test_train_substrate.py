@@ -1,0 +1,211 @@
+"""Optimizer, checkpointing, fault-tolerant trainer, compression, dist."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import StragglerMonitor, viable_mesh_shapes
+from repro.train import (
+    AdamWConfig,
+    StepFailure,
+    TrainerConfig,
+    adamw_init,
+    adamw_update,
+    checkpoint as ckpt,
+    compression_ratio,
+    dequantize_int8,
+    global_norm,
+    lr_at,
+    quantize_int8,
+    run,
+)
+
+
+# --- optimizer --------------------------------------------------------------
+
+
+def _quad_params():
+    return {"w": jnp.array([3.0, -2.0, 1.0]), "b": jnp.array(0.5)}
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200, schedule="constant")
+    params = _quad_params()
+    opt = adamw_init(params)
+    loss_fn = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    for _ in range(150):
+        grads = jax.grad(loss_fn)(params)
+        params, opt, _ = adamw_update(cfg, grads, opt, params)
+    assert float(loss_fn(params)) < 1e-3
+
+
+def test_lr_schedule_shapes():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(lr_at(cfg, jnp.int32(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(0.1, rel=1e-2)
+
+
+def test_grad_clip():
+    cfg = AdamWConfig(grad_clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params)
+    big = {"w": jnp.full(4, 100.0)}
+    _, _, metrics = adamw_update(cfg, big, opt, params)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+# --- checkpointing ----------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(12, dtype=np.float32).reshape(4, 3),
+            "b": {"c": np.float32(7.0)}}
+    ckpt.save(str(tmp_path), 10, tree, shards=2)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = ckpt.restore(str(tmp_path), like)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["a"]), tree["a"])
+    assert float(restored["b"]["c"]) == 7.0
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Save with 4 shards, restore with a structure-only template (the
+    shard count of the restoring job differs — elastic restart)."""
+    tree = {"w": np.random.default_rng(0).standard_normal((16, 8)).astype(np.float32)}
+    ckpt.save(str(tmp_path), 3, tree, shards=4)
+    restored, _ = ckpt.restore(str(tmp_path), {"w": jnp.zeros((16, 8))})
+    np.testing.assert_allclose(np.asarray(restored["w"]), tree["w"])
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    tree = {"x": np.ones(4, np.float32)}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    steps = [s for s, _ in ckpt.checkpoint_paths(str(tmp_path))]
+    assert steps == [4, 5]
+    # a stale tmp dir never counts as a checkpoint
+    os.makedirs(tmp_path / "step_99.tmp")
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_async_checkpoint(tmp_path):
+    tree = {"x": jnp.arange(8, dtype=jnp.float32)}
+    t = ckpt.save_async(str(tmp_path), 7, tree)
+    t.join()
+    restored, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 7
+
+
+# --- fault-tolerant trainer --------------------------------------------------
+
+
+def test_trainer_restarts_after_failure(tmp_path):
+    params = {"w": jnp.zeros(2)}
+
+    def step_fn(state, _):
+        return {"w": state["w"] + 1}, {"loss": float(2.0 / (state["w"][0] + 1))}
+
+    fails = {"left": 2}
+
+    def hook(step):
+        if step == 7 and fails["left"] > 0:
+            fails["left"] -= 1
+            raise StepFailure("injected")
+
+    cfg = TrainerConfig(total_steps=12, ckpt_dir=str(tmp_path), ckpt_every=5,
+                        max_restarts=5, log_every=100)
+    state, report = run(cfg, params, step_fn, iter(lambda: None, 1),
+                        failure_hook=hook, log=lambda *_: None)
+    assert report.restarts == 2
+    assert float(state["w"][0]) == 12.0  # resumed from step-5 checkpoint
+
+
+def test_trainer_aborts_on_nan(tmp_path):
+    def step_fn(state, _):
+        return state, {"loss": float("nan")}
+
+    cfg = TrainerConfig(total_steps=3, ckpt_dir=str(tmp_path),
+                        max_restarts=1, log_every=100)
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        run(cfg, {"w": jnp.zeros(1)}, step_fn, iter(lambda: None, 1),
+            log=lambda *_: None)
+
+
+# --- gradient compression -----------------------------------------------------
+
+
+def test_int8_quantization_bounded_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+    q, scale = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, scale) - x).max()
+    assert float(err) <= float(scale) / 2 + 1e-6
+
+
+def test_compressed_psum_error_feedback():
+    """Across steps, error feedback keeps the accumulated average close to
+    the true mean gradient."""
+    from repro.train.compression import compressed_psum
+
+    n_dev = 1  # single CPU device: psum over a size-1 axis is identity
+    grads = {"w": jnp.asarray(np.random.default_rng(1)
+                              .standard_normal(64).astype(np.float32))}
+
+    def f(g):
+        avg, err = compressed_psum(g, "dp")
+        avg2, err2 = compressed_psum(g, "dp", err)
+        return avg, avg2
+
+    avg, avg2 = jax.vmap(f, axis_name="dp")(
+        jax.tree.map(lambda x: x[None], grads))
+    # single replica: dequantized average within quantization error
+    scale = float(jnp.abs(grads["w"]).max()) / 127
+    assert float(jnp.abs(avg["w"][0] - grads["w"]).max()) <= scale
+    # error feedback tightens the second step
+    assert float(jnp.abs(avg2["w"][0] - grads["w"]).max()) <= scale
+
+
+def test_compression_ratio():
+    grads = {"w": jnp.zeros((128, 128))}
+    assert compression_ratio(grads) > 3.9
+
+
+# --- distribution helpers -----------------------------------------------------
+
+
+def test_viable_mesh_shapes():
+    shapes = viable_mesh_shapes(240, 16)
+    assert (15, 16) in shapes
+    shapes = viable_mesh_shapes(250, 16)  # 250 % 16 != 0 -> degrade model
+    assert all(250 % m == 0 for _, m in shapes)
+
+
+def test_straggler_monitor_flags_slow_replica():
+    mon = StragglerMonitor(n_replicas=4, warn_factor=2, drop_factor=4,
+                           patience=2)
+    mon.observe(np.array([1.0, 1.0, 1.0, 1.0]))
+    v1 = mon.observe(np.array([1.0, 1.0, 1.0, 5.0]))
+    assert v1 and v1[0].replica == 3 and v1[0].action == "warn"
+    v2 = mon.observe(np.array([1.0, 1.0, 1.0, 6.0]))
+    assert v2[0].action == "drop"
+    assert mon.dropped()[3]
+
+
+def test_masked_psum_mean():
+    from repro.dist import masked_psum_mean
+
+    grads = {"g": jnp.asarray([[2.0], [4.0], [6.0], [100.0]])}
+    alive = jnp.asarray([1.0, 1.0, 1.0, 0.0])  # drop the straggler
+    out = jax.vmap(
+        lambda g, a: masked_psum_mean(g, "dp", a), axis_name="dp"
+    )(grads, alive)
+    np.testing.assert_allclose(np.asarray(out["g"][0]), [4.0])
