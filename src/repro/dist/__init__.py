@@ -1,0 +1,39 @@
+"""Distribution layer: sharding policy, mesh planning, straggler handling.
+
+This package is the load-balancing substrate underneath the models ->
+launch -> serve chain:
+
+* ``policy``      — logical-axis sharding constraints (``constrain``) and
+                    the ``sharding_policy(mesh)`` context the step builders
+                    install around every traced step;
+* ``sharding``    — ``ShardingPlan`` (param / optimizer / cache shardings)
+                    and ``batch_spec`` for data-parallel inputs;
+* ``topology``    — ``viable_mesh_shapes`` (degrade the model axis when
+                    divisibility fails);
+* ``collectives`` — ``masked_psum_mean`` (straggler-masked gradient
+                    averaging);
+* ``straggler``   — ``StragglerMonitor`` emitting warn/drop verdicts from
+                    per-replica step times.
+
+Everything here works on a single-device CPU mesh (trivially replicated)
+and under ``jax.vmap``-emulated replica axes, so the whole import chain is
+testable without hardware.
+"""
+
+from repro.dist.collectives import masked_psum_mean
+from repro.dist.policy import constrain, sharding_policy
+from repro.dist.sharding import ShardingPlan, batch_spec
+from repro.dist.straggler import StragglerMonitor, StragglerVerdict
+from repro.dist.topology import abstract_mesh, viable_mesh_shapes
+
+__all__ = [
+    "ShardingPlan",
+    "abstract_mesh",
+    "StragglerMonitor",
+    "StragglerVerdict",
+    "batch_spec",
+    "constrain",
+    "masked_psum_mean",
+    "sharding_policy",
+    "viable_mesh_shapes",
+]

@@ -1,0 +1,34 @@
+"""Masked cross-replica reductions.
+
+``masked_psum_mean`` is the gradient-averaging primitive behind straggler
+dropping: replicas flagged by ``StragglerMonitor`` contribute a zero
+weight, and the mean renormalizes over the replicas that remain — the
+surviving replicas keep training on an unbiased average instead of
+stalling on (or being poisoned by) the dropped one.
+
+Works under real ``psum`` axes and under ``jax.vmap(..., axis_name=...)``
+emulation, which is how the CPU tests exercise it.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_psum_mean(tree: Any, axis: str, alive: jax.Array) -> Any:
+    """Mean of ``tree`` over the named replica axis, weighted by ``alive``.
+
+    ``alive`` is this replica's scalar weight (1.0 = contribute, 0.0 =
+    dropped).  The denominator is the live-replica count, clamped to 1 so
+    an all-dropped step yields zeros rather than NaNs.
+    """
+    alive = jnp.asarray(alive, jnp.float32)
+    n_alive = jnp.maximum(jax.lax.psum(alive, axis), 1.0)
+    return jax.tree.map(
+        lambda g: jax.lax.psum(g * alive.astype(g.dtype), axis)
+        / n_alive.astype(g.dtype),
+        tree,
+    )

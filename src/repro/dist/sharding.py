@@ -1,0 +1,149 @@
+"""Parameter / optimizer / cache sharding plans.
+
+``ShardingPlan`` maps every parameter leaf (addressed by its pytree path,
+e.g. ``blocks/b0/mix/wq``) to a PartitionSpec using Megatron-style roles:
+
+* column-parallel (output dim over ``model``): wq/wk/wv, MLA low-rank
+  projections, FFN gate/up, lm_head;
+* row-parallel (contracting dim over ``model``): wo, down;
+* vocab-parallel embedding (tied heads transpose into column-parallel);
+* MoE expert stacks shard the expert dim over ``model`` (expert
+  parallelism) when it divides, falling back to the column/row rule;
+* with ``fsdp=True`` the largest still-unsharded dim of each leaf is
+  additionally sharded over ``data`` (ZeRO-3 style).
+
+Leaves stacked for scan-over-layers (paths under ``blocks/`` or
+``encoder/``) keep their leading period dim replicated — it is the scan
+axis.  Every rule is divisibility-guarded: an axis is only ever named when
+it divides the dim, so the plan degrades to full replication on a trivial
+1-device mesh instead of crashing.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# last path component -> tensor-parallel role
+_COL = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b",
+        "gate", "up", "lm_head"}
+_ROW = {"wo", "down"}
+# stacked-for-scan top-level collections: leading dim is the scan axis
+_STACKED = {"blocks", "encoder"}
+
+
+def _path_name(path) -> str:
+    return "/".join(str(getattr(p, "key", p)) for p in path)
+
+
+def _axes_size(mesh, axes: Sequence[str]) -> int:
+    return int(math.prod(mesh.shape[a] for a in axes))
+
+
+class ShardingPlan:
+    """Sharding assignments for one mesh (axes ``data``/``model``, with an
+    optional pure-DP ``pod`` axis)."""
+
+    def __init__(self, mesh, fsdp: bool = False):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.model_axis: Optional[str] = (
+            "model" if "model" in mesh.shape else None)
+        self.fsdp_axis: Optional[str] = (
+            "data" if "data" in mesh.shape else None)
+
+    # -- parameters ---------------------------------------------------------
+
+    def param_spec(self, name: str, shape: Sequence[int]) -> P:
+        parts = [p for p in name.split("/") if p]
+        leaf = parts[-1] if parts else name
+        ndim = len(shape)
+        spec: list = [None] * ndim
+        lo = 1 if parts and parts[0] in _STACKED else 0
+
+        def fits(dim: int, size: int) -> bool:
+            return size > 1 and dim % size == 0
+
+        model = self.model_axis
+        msize = self.mesh.shape[model] if model else 0
+        if model and ndim - lo >= 2:
+            if leaf == "embed":
+                if fits(shape[0], msize):
+                    spec[0] = model          # vocab-parallel
+                elif fits(shape[1], msize):
+                    spec[1] = model
+            elif leaf in _ROW:
+                # MoE down is (E, W, D): the contracting dim is still -2
+                if ndim - lo == 3 and fits(shape[lo], msize):
+                    spec[lo] = model         # expert parallelism
+                elif fits(shape[ndim - 2], msize):
+                    spec[ndim - 2] = model
+            elif leaf in _COL:
+                if ndim - lo == 3 and leaf != "lm_head" \
+                        and fits(shape[lo], msize):
+                    spec[lo] = model         # expert parallelism
+                elif fits(shape[ndim - 1], msize):
+                    spec[ndim - 1] = model
+
+        if self.fsdp and self.fsdp_axis:
+            dsize = self.mesh.shape[self.fsdp_axis]
+            for i in sorted(range(lo, ndim), key=lambda i: -shape[i]):
+                if spec[i] is None and fits(shape[i], dsize):
+                    spec[i] = self.fsdp_axis
+                    break
+        return P(*spec)
+
+    def shard_params(self, tree: Any) -> Any:
+        def one(path, leaf):
+            return NamedSharding(
+                self.mesh, self.param_spec(_path_name(path), leaf.shape))
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+    # -- decode caches ------------------------------------------------------
+
+    def cache_spec(self, name: str, shape: Sequence[int],
+                   dp: Tuple[str, ...]) -> P:
+        parts = [p for p in name.split("/") if p]
+        ndim = len(shape)
+        lo = 1 if parts and parts[0] in _STACKED else 0
+        spec: list = [None] * ndim
+        dp = tuple(a for a in dp if a in self.mesh.shape)
+        if ndim > lo:
+            spec[lo] = _dp_entry(self.mesh, dp, shape[lo])
+        # (B, S, KV, hd) attention caches: kv heads over the model axis
+        model, msize = self.model_axis, 0
+        if model:
+            msize = self.mesh.shape[model]
+        if model and msize > 1 and ndim - lo == 4 \
+                and shape[lo + 2] % msize == 0:
+            spec[lo + 2] = model
+        return P(*spec)
+
+    def shard_cache(self, tree: Any, dp: Tuple[str, ...]) -> Any:
+        def one(path, leaf):
+            return NamedSharding(
+                self.mesh, self.cache_spec(_path_name(path), leaf.shape, dp))
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def _dp_entry(mesh, dp: Tuple[str, ...], dim: int):
+    """Widest suffix of the dp axes that divides ``dim`` (dropping ``pod``
+    first, mirroring the fallback order of the ``constrain`` call sites),
+    or None when even the innermost axis does not fit."""
+    for i in range(len(dp)):
+        cand = dp[i:]
+        size = _axes_size(mesh, cand)
+        if size > 1 and dim % size == 0:
+            return cand if len(cand) > 1 else cand[0]
+    return None
+
+
+def batch_spec(mesh, global_batch: int) -> P:
+    """PartitionSpec for a leading global-batch dim: sharded over the
+    widest divisible suffix of the (pod, data) axes, else replicated."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    entry = _dp_entry(mesh, dp, global_batch)
+    return P(entry) if entry is not None else P()

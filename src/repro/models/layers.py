@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+from repro.dist.policy import constrain
 
 Params = Dict[str, jax.Array]
 
@@ -146,8 +147,6 @@ def _sdpa(
     scores = scores / jnp.sqrt(hd).astype(jnp.float32)
     # keep the S^2 scores sharded: kv-heads, else head-group, else a
     # sequence dim over the model axis (never replicate this tensor)
-    from repro.dist.policy import constrain
-
     dp = ("pod", "data")
     scores = constrain(scores, [
         (dp, "model", None, None, None), ("data", "model", None, None, None),
@@ -340,8 +339,6 @@ def mla_attention(
         jnp.einsum("bshr,btr->bhst", q_lat, new_c)
         + jnp.einsum("bshd,btd->bhst", q_rope, new_kr)
     ).astype(jnp.float32) / jnp.sqrt(dn + dr)
-    from repro.dist.policy import constrain
-
     dp = ("pod", "data")
     scores = constrain(scores, [
         (dp, "model", None, None), ("data", "model", None, None),
@@ -423,8 +420,6 @@ def moe_layer(p: Params, x: jax.Array, moe: MoEConfig) -> jax.Array:
     n = b * s
     e, k = moe.n_experts, moe.top_k
     xt = x.reshape(n, d)
-    from repro.dist.policy import constrain
-
     xt = constrain(xt, [(("pod", "data"), None), ("data", None)])
     logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))
     gates, eids = jax.lax.top_k(logits, k)                  # (N, k)

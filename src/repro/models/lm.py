@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.dist.policy import constrain
 from repro.models import layers as L
 from repro.models import ssm as S
 
@@ -253,8 +254,6 @@ def forward_hidden(
         # scan stashes one carry per period — sharding its sequence dim
         # over the model axis (Megatron-SP) divides that stash by the TP
         # width; XLA re-gathers it inside attention automatically.
-        from repro.dist.policy import constrain
-
         h = constrain(h, [
             (("pod", "data"), "model", None),
             ("data", "model", None),

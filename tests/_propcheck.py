@@ -1,0 +1,79 @@
+"""Seeded-sweep stand-in for ``hypothesis``.
+
+The property tests prefer real hypothesis (declared in the ``test`` extra
+of pyproject.toml); when it is absent this shim keeps them *running*
+instead of failing collection.  ``@given`` turns the test into a
+deterministic sweep: ``max_examples`` draws per strategy from a
+``numpy.random`` generator seeded by the test's qualified name, so a
+failure reproduces exactly and prints its falsifying example.
+
+Only the strategy surface this suite uses is implemented: ``integers``,
+``floats``, ``booleans``, ``sampled_from``.
+"""
+
+from __future__ import annotations
+
+import functools
+import sys
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def settings(max_examples: int = 20, **_):
+    """Accepts (and mostly ignores) hypothesis settings; keeps
+    ``max_examples``.  Works above or below ``@given``."""
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def sweep():
+            # body below; __wrapped__ removed after definition so pytest
+            # sees a zero-arg test, not the strategy params as fixtures
+            n = getattr(sweep, "_propcheck_max_examples", 20)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode("utf-8")))
+            for i in range(n):
+                kwargs = {k: s.draw(rng) for k, s in strats.items()}
+                try:
+                    fn(**kwargs)
+                except BaseException:
+                    print(f"propcheck falsifying example "
+                          f"({fn.__qualname__}, draw {i}): {kwargs!r}",
+                          file=sys.stderr)
+                    raise
+        del sweep.__wrapped__
+        return sweep
+    return deco

@@ -1,0 +1,193 @@
+"""repro.dist beyond the substrate tests: plans on trivial meshes, mesh
+planning edge cases, straggler patience/reset, constrain spec selection."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist import (
+    ShardingPlan,
+    StragglerMonitor,
+    abstract_mesh,
+    batch_spec,
+    constrain,
+    sharding_policy,
+    viable_mesh_shapes,
+)
+from repro.dist.policy import select_spec, spec_viable
+from repro.models import lm
+
+
+# --- ShardingPlan / batch_spec on a 1-device CPU mesh -----------------------
+
+
+def _spec_entries(sharding):
+    return tuple(sharding.spec)
+
+
+def test_sharding_plan_single_device_fully_replicated():
+    """On a trivial mesh every param/cache spec degrades to replication —
+    no divisibility crash, no size-1 axis ever named."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("internlm2-1.8b")
+    plan = ShardingPlan(mesh, fsdp=True)
+    params = jax.eval_shape(lambda: lm.init_lm(cfg, jax.random.PRNGKey(0)))
+    shardings = plan.shard_params(params)
+    for leaf in jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec")):
+        assert all(a is None for a in _spec_entries(leaf)), leaf
+    assert batch_spec(mesh, 8) == P()
+    assert batch_spec(mesh, 7) == P()
+
+
+def test_batch_spec_divides_or_replicates():
+    mesh = abstract_mesh((4, 2), ("data", "model"))
+    assert batch_spec(mesh, 256) == P("data")
+    assert batch_spec(mesh, 6) == P()          # 6 % 4 != 0 -> replicate
+    multi = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert batch_spec(multi, 256) == P(("pod", "data"))
+    # pod*data=32 does not divide 48, but data=16 does: degrade, don't
+    # replicate (mirrors the constrain call sites' fallback order)
+    assert batch_spec(multi, 48) == P("data")
+    assert batch_spec(multi, 7) == P()
+
+
+def test_sharding_plan_engages_on_wide_mesh():
+    """On the production single-pod mesh the model axis actually shards
+    the big matrices (this plan is not vacuously replicated)."""
+    mesh = abstract_mesh((16, 16), ("data", "model"))
+    plan = ShardingPlan(mesh, fsdp=False)
+    # column-parallel projection inside a scan stack: (periods, d, out)
+    spec = plan.param_spec("blocks/b0/mix/wq", (8, 2048, 2048))
+    assert tuple(spec) == (None, None, "model")
+    # row-parallel output projection
+    spec = plan.param_spec("blocks/b0/mix/wo", (8, 2048, 2048))
+    assert tuple(spec) == (None, "model", None)
+    # vocab-parallel embedding
+    spec = plan.param_spec("embed", (92544, 2048))
+    assert tuple(spec)[0] == "model"
+
+
+def test_sharding_plan_fsdp_adds_data_axis():
+    mesh = abstract_mesh((4, 2), ("data", "model"))
+    plan = ShardingPlan(mesh, fsdp=True)
+    spec = tuple(plan.param_spec("blocks/b0/mix/wq", (8, 64, 32)))
+    assert spec.count("model") == 1 and spec.count("data") == 1
+    # indivisible leaf stays replicated rather than crashing
+    assert tuple(plan.param_spec("blocks/b0/norm1", (8, 7))) == (None, None)
+
+
+# --- viable_mesh_shapes edge cases ------------------------------------------
+
+
+def test_viable_mesh_shapes_prime_chip_count():
+    assert viable_mesh_shapes(7, 4) == [(7, 1)]
+    assert viable_mesh_shapes(13, 13) == [(1, 13), (13, 1)]
+
+
+def test_viable_mesh_shapes_model_parallel_exceeds_chips():
+    shapes = viable_mesh_shapes(8, 64)
+    assert shapes[0] == (1, 8)                 # clamped to n_chips
+    assert all(d * m == 8 for d, m in shapes)
+
+
+def test_viable_mesh_shapes_ordering_widest_model_first():
+    shapes = viable_mesh_shapes(240, 16)
+    assert shapes[0] == (15, 16)
+    models = [m for _, m in shapes]
+    assert models == sorted(models, reverse=True)
+
+
+# --- StragglerMonitor patience / reset --------------------------------------
+
+
+def test_straggler_recovery_resets_patience():
+    mon = StragglerMonitor(n_replicas=3, warn_factor=2, drop_factor=4,
+                           patience=2)
+    v = mon.observe(np.array([1.0, 1.0, 5.0]))
+    assert [x.action for x in v] == ["warn"]   # drop-level, patience 1/2
+    mon.observe(np.array([1.0, 1.0, 1.0]))     # recovered -> streak reset
+    v = mon.observe(np.array([1.0, 1.0, 5.0]))
+    assert [x.action for x in v] == ["warn"]   # back to 1/2, never dropped
+    assert not mon.dropped().any()
+
+
+def test_straggler_warn_level_never_drops():
+    mon = StragglerMonitor(n_replicas=3, warn_factor=2, drop_factor=10,
+                           patience=1)
+    for _ in range(5):
+        v = mon.observe(np.array([1.0, 1.0, 3.0]))
+        assert [x.action for x in v] == ["warn"]
+    assert not mon.dropped().any()
+
+
+def test_straggler_warn_level_preserves_drop_streak():
+    """A replica oscillating between drop-level and warn-level slowness is
+    persistently sick: warn-level steps must not reset the drop streak."""
+    mon = StragglerMonitor(n_replicas=3, warn_factor=2, drop_factor=4,
+                           patience=2)
+    assert mon.observe(np.array([1.0, 1.0, 5.0]))[0].action == "warn"
+    assert mon.observe(np.array([1.0, 1.0, 3.0]))[0].action == "warn"
+    assert mon.observe(np.array([1.0, 1.0, 5.0]))[0].action == "drop"
+    assert mon.dropped()[2]
+
+
+def test_straggler_dropped_replica_leaves_baseline():
+    mon = StragglerMonitor(n_replicas=4, warn_factor=2, drop_factor=4,
+                           patience=1)
+    v = mon.observe(np.array([1.0, 1.0, 1.0, 40.0]))
+    assert v[0].action == "drop"
+    # the dropped replica no longer skews the median nor gets verdicts
+    v = mon.observe(np.array([1.0, 1.0, 1.0, 40.0]))
+    assert v == []
+    np.testing.assert_array_equal(mon.alive(), [1.0, 1.0, 1.0, 0.0])
+
+
+# --- constrain / spec selection ---------------------------------------------
+
+
+def test_constrain_noop_without_policy():
+    x = jnp.ones((4, 4))
+    out = constrain(x, [("data", "model")])
+    assert out is x
+
+
+def test_select_spec_skips_missing_axes_and_indivisible_dims():
+    mesh = abstract_mesh((4, 2), ("data", "model"))
+    # first candidate names a "pod" axis this mesh lacks -> falls through
+    spec = select_spec(mesh, (8, 6), [(("pod", "data"), None),
+                                      ("data", None)])
+    assert tuple(spec) == ("data", None)
+    # 6 % 4 != 0 kills the data candidate; 6 % 2 == 0 keeps model
+    spec = select_spec(mesh, (6, 8), [("data", None), ("model", None)])
+    assert tuple(spec) == ("model", None)
+    assert select_spec(mesh, (7, 7), [("data", None), ("model", None)]) is None
+    # one mesh axis may not shard two dims of the same array
+    assert not spec_viable(mesh, (4, 4), ("data", "data"))
+
+
+def test_sharding_policy_applies_constraint_under_jit():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    @jax.jit
+    def f(x):
+        with sharding_policy(mesh):
+            return constrain(x, [("data", "model")]) * 2.0
+
+    out = f(jnp.ones((4, 4)))
+    np.testing.assert_allclose(np.asarray(out), 2.0 * np.ones((4, 4)))
+
+
+def test_sharding_policy_nests_and_restores():
+    from repro.dist.policy import active_mesh
+
+    mesh = abstract_mesh((2,), ("data",))
+    assert active_mesh() is None
+    with sharding_policy(mesh):
+        assert active_mesh() is mesh
+        with sharding_policy(None):
+            assert active_mesh() is None
+        assert active_mesh() is mesh
+    assert active_mesh() is None

@@ -1,7 +1,10 @@
 """Property tests for the hybrid preprocessing (Algorithm 1 + edge-cut)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # seeded-sweep fallback, tests/_propcheck.py
+    from tests._propcheck import given, settings, strategies as st
 
 from repro.core import (
     ell_to_dense,

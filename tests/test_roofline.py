@@ -86,9 +86,10 @@ def test_sharding_plan_divisibility():
     import numpy as np
 
     from repro.dist.sharding import ShardingPlan
+    from repro.dist.topology import abstract_mesh
     from repro.models import lm
 
-    mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+    mesh = abstract_mesh((4, 2), ("data", "model"))
     cfg = get_config("internlm2-1.8b")
     shapes = jax.eval_shape(lambda: lm.init_lm(cfg, jax.random.PRNGKey(0)))
     plan = ShardingPlan(mesh, fsdp=True)

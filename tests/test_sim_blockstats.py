@@ -1,7 +1,10 @@
 """BlockStats (vectorized) must agree with a brute-force per-block reference."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # seeded-sweep fallback, tests/_propcheck.py
+    from tests._propcheck import given, settings, strategies as st
 
 from repro.core import random_power_law_csr
 from repro.sim import alg2_best_k, compute_block_stats

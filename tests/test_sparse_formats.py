@@ -1,6 +1,9 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # seeded-sweep fallback, tests/_propcheck.py
+    from tests._propcheck import given, settings, strategies as st
 
 from repro.core import (
     CSRMatrix,

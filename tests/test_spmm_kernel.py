@@ -8,7 +8,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # seeded-sweep fallback, tests/_propcheck.py
+    from tests._propcheck import given, settings, strategies as st
 
 from repro.core import preprocess, random_power_law_csr, spmm_ell
 from repro.core.dataflow import plan_kernel_grid

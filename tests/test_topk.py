@@ -1,7 +1,10 @@
 """Tests for Algorithm 2 (flexible top-k VRF fixed-region selection)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # seeded-sweep fallback, tests/_propcheck.py
+    from tests._propcheck import given, settings, strategies as st
 
 from repro.core import (
     partition_into_tiles,
