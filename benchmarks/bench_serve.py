@@ -1,0 +1,84 @@
+"""Serving benchmark: request latency/throughput of the `repro.serve` engine.
+
+One CSV block per dataset (cora + pubmed by default, scoped by
+REPRO_DATASETS like every other harness): p50/p99 per-request latency and
+throughput — requests/s plus tok-equivalent/s (answered seed logits per
+second, the serving unit of work) — for the single-node and batched-query
+scenarios, with the full-graph pass as the baseline row.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+# run.py-style bootstrap so `python benchmarks/bench_serve.py` works alone.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import dataset_list  # noqa: E402
+from repro.serve import ServeEngine  # noqa: E402
+
+SERVE_DATASETS = ("cora", "pubmed")
+
+
+def bench_dataset(
+    name: str,
+    requests: int = 64,
+    max_batch: int = 8,
+    fanout: int = 16,
+    seeds_per_request: int = 4,
+    hidden: int = 32,
+    warmup_max_nodes: "int | None" = None,  # None: engine derives the bound
+) -> None:
+    engine = ServeEngine.from_dataset(
+        name,
+        hidden_dim=hidden,
+        fanout=fanout,
+        max_batch=max_batch,
+        max_seeds=seeds_per_request,
+    )
+    built = engine.warmup(max_nodes=warmup_max_nodes)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        rng.choice(engine.graph.n_nodes, size=seeds_per_request, replace=False)
+        for _ in range(requests)
+    ]
+
+    for _ in range(3):
+        engine.full_forward()
+    rows = [engine.report("full")]
+
+    t0 = time.perf_counter()
+    for seeds in reqs:
+        engine.query(seeds)
+    rows.append(engine.report("query", wall_s=time.perf_counter() - t0))
+
+    t0 = time.perf_counter()
+    engine.query_batch(reqs)
+    rows.append(engine.report("batch", wall_s=time.perf_counter() - t0))
+
+    post_warmup = engine.compile_count - built
+    for rep in rows:
+        print(
+            f"{name},{rep.scenario},{rep.n_requests},{rep.p50_ms:.3f},"
+            f"{rep.p99_ms:.3f},{rep.req_per_s:.2f},{rep.tok_per_s:.1f},"
+            f"{post_warmup}"
+        )
+
+
+def run(requests: int = 64, **kw) -> None:
+    print(
+        "dataset,scenario,requests,p50_ms,p99_ms,req_per_s,"
+        "tok_equiv_per_s,compiles_post_warmup"
+    )
+    names = [d for d in dataset_list() if d in SERVE_DATASETS]
+    for name in names:
+        bench_dataset(name, requests=requests, **kw)
+
+
+if __name__ == "__main__":
+    run()

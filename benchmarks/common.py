@@ -2,14 +2,16 @@
 
 Loads a dataset, applies the edge-cut permutation (greedy BFS clustering,
 the METIS stand-in — DESIGN.md §5.2), and caches the permuted adjacency +
-BlockStats to disk so figure benchmarks don't redo the O(nnz log nnz)
-preprocessing of Reddit/Yelp.
+BlockStats through the shared disk-cache machinery (`repro.serve.cache`,
+also used by the serving artifact registry) so figure benchmarks don't
+redo the O(nnz log nnz) preprocessing of Reddit/Yelp.  Artifacts are never
+committed — `.cache/` is gitignored and every entry regenerates
+deterministically (dataset synthesis and the permutation are seeded).
 """
 
 from __future__ import annotations
 
 import os
-import pickle
 import time
 from typing import List, Tuple
 
@@ -19,11 +21,10 @@ from repro.core.preprocessing import apply_symmetric_permutation
 from repro.core.sparse_formats import CSRMatrix
 from repro.graphs import load_dataset
 from repro.graphs.partition import label_propagation_permutation
+from repro.serve.cache import default_cache_dir, disk_memo
 from repro.sim import BlockStats, compute_block_stats
 
-CACHE_DIR = os.environ.get(
-    "REPRO_CACHE", os.path.join(os.path.dirname(__file__), "..", ".cache")
-)
+CACHE_DIR = default_cache_dir()
 
 SMALL = ["cora", "citeseer", "pubmed"]
 ALL_FIVE = ["cora", "citeseer", "pubmed", "reddit", "yelp"]
@@ -38,21 +39,20 @@ def prepared_dataset(
     name: str, tile: int = 16, seed: int = 0
 ) -> Tuple[CSRMatrix, BlockStats, int]:
     """(permuted normalized adjacency, block stats, feature_dim), cached."""
-    os.makedirs(CACHE_DIR, exist_ok=True)
-    path = os.path.join(CACHE_DIR, f"{name}_t{tile}_s{seed}.pkl")
-    if os.path.exists(path):
-        with open(path, "rb") as f:
-            padj, stats, fdim = pickle.load(f)
-        return padj, stats, fdim
-    t0 = time.time()
-    ds = load_dataset(name, seed=seed, with_features=False)
-    perm = label_propagation_permutation(ds.adj_norm)
-    padj = apply_symmetric_permutation(ds.adj_norm, perm)
-    stats = compute_block_stats(padj, tile)
-    fdim = ds.spec.feature_dim
-    with open(path, "wb") as f:
-        pickle.dump((padj, stats, fdim), f, protocol=4)
-    print(f"[prep] {name}: tile={tile} nnz={padj.nnz} ({time.time() - t0:.1f}s)")
+
+    def build():
+        t0 = time.time()
+        ds = load_dataset(name, seed=seed, with_features=False)
+        perm = label_propagation_permutation(ds.adj_norm)
+        padj = apply_symmetric_permutation(ds.adj_norm, perm)
+        stats = compute_block_stats(padj, tile)
+        print(f"[prep] {name}: tile={tile} nnz={padj.nnz} "
+              f"({time.time() - t0:.1f}s)")
+        return padj, stats, ds.spec.feature_dim
+
+    (padj, stats, fdim), _ = disk_memo(
+        f"{name}_t{tile}_s{seed}", build, cache_dir=CACHE_DIR
+    )
     return padj, stats, fdim
 
 

@@ -17,6 +17,7 @@ from benchmarks import (  # noqa: E402
     bench_area,
     bench_buffer_sizes,
     bench_flexible_k,
+    bench_serve,
     bench_spmm_kernel,
     bench_vlen_depth,
 )
@@ -32,6 +33,7 @@ def main() -> None:
         ("Fig 12 (buffer sizes)", bench_buffer_sizes),
         ("Fig 13 (VLEN/depth)", bench_vlen_depth),
         ("SpMM kernel", bench_spmm_kernel),
+        ("Serving engine", bench_serve),
     ]:
         print(f"\n## {name}")
         t = time.time()

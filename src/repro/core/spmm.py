@@ -82,6 +82,51 @@ def spmm_ell(
     raise ValueError(f"unknown impl: {impl}")
 
 
+def spmm_ell_arrays(
+    cols: jax.Array,      # (R, tau) int32, PAD_COL padding
+    vals: jax.Array,      # (R, tau)
+    row_map: jax.Array,   # (R,) int32, -1 padding
+    dense: jax.Array,     # (K, F)
+    n_out_rows: int,
+    impl: str = "reference",
+    block_rows: int = 128,
+    block_k: int = 128,
+    block_f: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Array-level ``spmm_ell``: same math, but fully jit-traceable.
+
+    :func:`spmm_ell` takes the host-side :class:`TiledELL` container and can
+    plan a block-skipping launch schedule from it; this variant takes the
+    ELL arrays directly so callers (the serving batcher) can trace it inside
+    a compiled step with shapes fixed by a bucket ladder.  Operand padding
+    to block multiples happens with ``jnp.pad`` (static shapes), and the
+    Pallas path always uses the masked dense grid — grid compaction needs
+    host-side occupancy planning, which is unavailable under trace, so
+    ``pallas_sparse`` degrades to ``pallas`` here.
+    """
+    vals = vals.astype(dense.dtype)
+    if impl == "reference":
+        return _ell_matmul_ref(cols, vals, row_map, dense, n_out_rows)
+    if impl in ("pallas", "pallas_sparse"):
+        from repro.kernels import flexvector_spmm as fv  # deferred, as above
+
+        cols_p, vals_p, dense_p, (r, f) = fv.pad_operands(
+            cols, vals, dense, block_rows, block_k, block_f
+        )
+        sub = fv.spmm_ell_dense_grid(
+            cols_p,
+            vals_p,
+            dense_p,
+            block_rows=block_rows,
+            block_k=block_k,
+            block_f=block_f,
+            interpret=interpret,
+        )[:r, :f]
+        return segment_accumulate(sub, row_map, n_out_rows)
+    raise ValueError(f"unknown impl: {impl}")
+
+
 @partial(jax.jit, static_argnames=("n_out_rows",))
 def segment_accumulate(
     sub_rows: jax.Array, row_map: jax.Array, n_out_rows: int

@@ -2,6 +2,8 @@
 
 from repro.graphs.datasets import DATASETS, DatasetSpec, load_dataset
 from repro.graphs.partition import cluster_greedy_bfs, label_propagation_permutation, edge_cut_quality
+from repro.graphs.sampling import induced_subgraph, sample_k_hop
 
 __all__ = ["DATASETS", "DatasetSpec", "load_dataset", "cluster_greedy_bfs",
-           "label_propagation_permutation", "edge_cut_quality"]
+           "label_propagation_permutation", "edge_cut_quality",
+           "sample_k_hop", "induced_subgraph"]

@@ -199,21 +199,26 @@ def _default_interpret(interpret: Optional[bool]) -> bool:
 
 
 def pad_operands(
-    cols: np.ndarray,
-    vals: np.ndarray,
+    cols,
+    vals,
     dense,
     block_rows: int,
     block_k: int,
     block_f: int,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, Tuple[int, int]]:
-    """Pad to block multiples; ELL pad slots use PAD_COL so they mask out."""
+    """Pad to block multiples; ELL pad slots use PAD_COL so they mask out.
+
+    Pure jnp on static shapes, so it is trace-safe — the serving path calls
+    it on tracers inside a compiled step.
+    """
+    cols, vals, dense = jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(dense)
     r, tau = cols.shape
     k, f = dense.shape
     rp = -(-r // block_rows) * block_rows
     kp = -(-k // block_k) * block_k
     fp = -(-f // block_f) * block_f
     if rp != r:
-        cols = np.pad(cols, ((0, rp - r), (0, 0)), constant_values=-1)
-        vals = np.pad(vals, ((0, rp - r), (0, 0)))
-    dense = jnp.pad(jnp.asarray(dense), ((0, kp - k), (0, fp - f)))
-    return jnp.asarray(cols), jnp.asarray(vals), dense, (r, f)
+        cols = jnp.pad(cols, ((0, rp - r), (0, 0)), constant_values=-1)
+        vals = jnp.pad(vals, ((0, rp - r), (0, 0)))
+    dense = jnp.pad(dense, ((0, kp - k), (0, fp - f)))
+    return cols, vals, dense, (r, f)

@@ -46,6 +46,16 @@ class GCNGraph:
 
     pre: PreprocessResult
     n_nodes: int
+    inv: Optional[np.ndarray] = None  # inverse edge-cut permutation
+
+    def __post_init__(self):
+        # Precomputed once: the inverse permutation sits on the per-request
+        # hot path of the serving engine, so it must not be rebuilt per call.
+        if self.inv is None:
+            perm = np.asarray(self.pre.perm)
+            inv = np.empty_like(perm)
+            inv[perm] = np.arange(perm.size)
+            self.inv = inv
 
     @staticmethod
     def build(adj_norm: CSRMatrix, cfg: GCNConfig) -> "GCNGraph":
@@ -100,8 +110,7 @@ def gcn_forward(
         )
         if i < n_layers - 1:
             x = jax.nn.relu(x)
-    inv = jnp.zeros_like(perm).at[perm].set(jnp.arange(perm.shape[0]))
-    return x[inv]
+    return x[jnp.asarray(graph.inv)]
 
 
 def gcn_loss(

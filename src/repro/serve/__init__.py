@@ -1,0 +1,26 @@
+"""repro.serve — batched GCN inference serving on the FlexVector SpMM core.
+
+Registry (preprocess once per graph) -> sampler (bounded per-request
+receptive fields, vertex-cut re-applied) -> micro-batcher (shape buckets,
+zero recompiles after warmup) -> engine (scenarios + latency reporting).
+"""
+
+from repro.serve.batcher import Bucket, BucketLadder, MicroBatcher, PaddedRequest
+from repro.serve.engine import LatencyReport, ServeEngine, latency_report
+from repro.serve.registry import ArtifactRegistry, RegistryStats, graph_key
+from repro.serve.sampler import SampledSubgraph, SubgraphSampler
+
+__all__ = [
+    "ArtifactRegistry",
+    "RegistryStats",
+    "graph_key",
+    "SampledSubgraph",
+    "SubgraphSampler",
+    "Bucket",
+    "BucketLadder",
+    "MicroBatcher",
+    "PaddedRequest",
+    "LatencyReport",
+    "latency_report",
+    "ServeEngine",
+]

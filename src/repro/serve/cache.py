@@ -1,0 +1,64 @@
+"""Disk cache shared by the serving registry and the benchmark harnesses.
+
+One flat directory of pickle files keyed by a caller-supplied string.  The
+location defaults to ``<repo>/.cache`` (ignored by git — artifacts are
+regenerated deterministically on first use) and can be redirected with the
+``REPRO_CACHE`` environment variable, matching `benchmarks/common.py`.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+from typing import Any, Callable, Optional, Tuple
+
+_REPO_ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+)
+
+
+def default_cache_dir() -> str:
+    env = os.environ.get("REPRO_CACHE")
+    if env:
+        return env
+    # Four levels up is the repo root only for an src-layout checkout or
+    # editable install; from site-packages fall back to a user cache dir
+    # instead of dumping pickles next to the interpreter.
+    if os.path.isdir(os.path.join(_REPO_ROOT, "src", "repro")):
+        return os.path.join(_REPO_ROOT, ".cache")
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro")
+
+
+def cache_path(key: str, cache_dir: Optional[str] = None) -> str:
+    return os.path.join(cache_dir or default_cache_dir(), f"{key}.pkl")
+
+
+def load_pickle(key: str, cache_dir: Optional[str] = None) -> Tuple[Any, bool]:
+    """Return ``(obj, True)`` on a hit, ``(None, False)`` on a miss."""
+    path = cache_path(key, cache_dir)
+    if not os.path.exists(path):
+        return None, False
+    with open(path, "rb") as f:
+        return pickle.load(f), True
+
+
+def store_pickle(key: str, obj: Any, cache_dir: Optional[str] = None) -> str:
+    path = cache_path(key, cache_dir)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        pickle.dump(obj, f, protocol=4)
+    os.replace(tmp, path)  # atomic: concurrent readers never see a torn file
+    return path
+
+
+def disk_memo(
+    key: str, builder: Callable[[], Any], cache_dir: Optional[str] = None
+) -> Tuple[Any, bool]:
+    """Load ``key`` from disk, or build + persist it.  Returns (obj, hit)."""
+    obj, hit = load_pickle(key, cache_dir)
+    if hit:
+        return obj, True
+    obj = builder()
+    store_pickle(key, obj, cache_dir)
+    return obj, False

@@ -1,0 +1,125 @@
+"""Artifact registry: content-keyed preprocessed operands + forward steps.
+
+The hybrid preprocessing pipeline (edge-cut + Algorithm 1 vertex-cut) is
+the expensive, request-independent half of GCN serving.  The registry keys
+``(adjacency contents, preprocessing-relevant GCNConfig fields)`` to the
+preprocessed :class:`~repro.models.gcn.GCNGraph` so that cost is paid once
+per graph, not once per request:
+
+* an in-memory LRU holds hot artifacts (full graphs *and* sampled
+  subgraphs — repeated queries over the same node set skip the vertex-cut
+  entirely);
+* full-graph artifacts are additionally persisted through the shared
+  ``.cache`` pickle machinery (`repro.serve.cache`, the same path
+  `benchmarks/common.py` uses) so they survive process restarts.
+
+Jitted full-graph forward steps are cached per key in memory only
+(executables are not picklable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.sparse_formats import CSRMatrix
+from repro.models.gcn import GCNConfig, GCNGraph, gcn_forward
+from repro.serve import cache as disk_cache
+
+_KEY_VERSION = "v1"
+
+
+@dataclasses.dataclass
+class RegistryStats:
+    """Counters proving where each artifact came from."""
+
+    mem_hits: int = 0
+    disk_hits: int = 0
+    builds: int = 0          # preprocessing actually ran
+
+
+def graph_key(adj: CSRMatrix, cfg: GCNConfig) -> str:
+    """Content hash over the adjacency and the preprocessing-relevant
+    config fields (dims/impl don't change the preprocessed operand)."""
+    h = hashlib.sha256()
+    h.update(_KEY_VERSION.encode())
+    h.update(np.ascontiguousarray(adj.indptr).tobytes())
+    h.update(np.ascontiguousarray(adj.indices).tobytes())
+    h.update(np.ascontiguousarray(adj.data).tobytes())
+    meta = (adj.shape, cfg.tau, cfg.tile_rows, cfg.edge_cut, cfg.block_rows)
+    h.update(repr(meta).encode())
+    return f"gcngraph_{h.hexdigest()[:24]}"
+
+
+class ArtifactRegistry:
+    """LRU + disk registry of preprocessed graphs and jitted forward steps."""
+
+    def __init__(self, cache_dir: Optional[str] = None, mem_capacity: int = 512):
+        self.cache_dir = cache_dir or disk_cache.default_cache_dir()
+        self.mem_capacity = mem_capacity
+        self.stats = RegistryStats()
+        self._graphs: "OrderedDict[str, GCNGraph]" = OrderedDict()
+        self._forwards: Dict[Tuple[str, GCNConfig], Callable] = {}
+
+    def get_or_build(
+        self,
+        adj: CSRMatrix,
+        cfg: GCNConfig,
+        persist: bool = True,
+        key: Optional[str] = None,
+    ) -> GCNGraph:
+        """Return the preprocessed graph for ``(adj, cfg)``, building it at
+        most once per content key (``persist`` keeps full graphs on disk;
+        sampled subgraphs stay memory-only).  ``key`` lets callers that
+        already hashed the adjacency skip a second content pass."""
+        if key is None:
+            key = graph_key(adj, cfg)
+        graph = self._graphs.get(key)
+        if graph is not None:
+            self._graphs.move_to_end(key)
+            self.stats.mem_hits += 1
+            return graph
+        if persist:
+            graph, hit = disk_cache.load_pickle(key, self.cache_dir)
+            if hit:
+                self.stats.disk_hits += 1
+                self._remember(key, graph)
+                return graph
+        graph = GCNGraph.build(adj, cfg)
+        self.stats.builds += 1
+        if persist:
+            disk_cache.store_pickle(key, graph, self.cache_dir)
+        self._remember(key, graph)
+        return graph
+
+    def forward_step(
+        self, adj: CSRMatrix, cfg: GCNConfig, persist: bool = True
+    ) -> Callable:
+        """Jitted full-graph forward ``step(params, features) -> logits``
+        bound to the registered preprocessed operand.
+
+        Keyed on ``(graph_key, cfg)``: graph_key deliberately ignores
+        forward-only fields (dims, spmm impl/blocks) so the *operand* is
+        shared, but the jitted step must not be."""
+        gkey = graph_key(adj, cfg)
+        key = (gkey, cfg)
+        fwd = self._forwards.get(key)
+        if fwd is not None:
+            return fwd
+        graph = self.get_or_build(adj, cfg, persist=persist, key=gkey)
+        fwd = jax.jit(lambda params, feats: gcn_forward(params, graph, feats, cfg))
+        self._forwards[key] = fwd
+        return fwd
+
+    def _remember(self, key: str, graph: GCNGraph) -> None:
+        self._graphs[key] = graph
+        self._graphs.move_to_end(key)
+        while len(self._graphs) > self.mem_capacity:
+            old, _ = self._graphs.popitem(last=False)
+            for fkey in [k for k in self._forwards if k[0] == old]:
+                del self._forwards[fkey]

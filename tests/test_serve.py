@@ -1,0 +1,249 @@
+"""Tests for the repro.serve subsystem (registry, sampler, batcher, engine).
+
+Uses a small synthetic community graph so the whole module stays fast; the
+engine-level properties proved here are the acceptance criteria of the
+serving PR: cache hits skip preprocessing, sampled queries are exact for
+uncapped fanout, and a warmed engine never recompiles.
+"""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.sparse_formats import CSRMatrix, PAD_COL
+from repro.graphs.datasets import DatasetSpec, gcn_normalize, synthesize_adjacency
+from repro.graphs.sampling import induced_subgraph, sample_k_hop
+from repro.models.gcn import GCNConfig, gcn_forward, init_params
+from repro.serve import (
+    ArtifactRegistry,
+    BucketLadder,
+    ServeEngine,
+    SubgraphSampler,
+    graph_key,
+)
+
+
+SPEC = DatasetSpec("toy", nodes=400, edges=1_600, feature_dim=32, classes=5)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    """Keep registry persistence off the shared repo .cache: a stale
+    artifact there could mask a preprocessing regression in these tests."""
+    monkeypatch.setenv("REPRO_CACHE", str(tmp_path / "cache"))
+
+
+@pytest.fixture(scope="module")
+def toy_graph():
+    adj = synthesize_adjacency(SPEC, seed=7)
+    adj_norm = gcn_normalize(adj)
+    rng = np.random.default_rng(7)
+    feats = rng.standard_normal((SPEC.nodes, SPEC.feature_dim)).astype(np.float32)
+    return adj_norm, feats
+
+
+def _cfg(**kw):
+    base = dict(in_dim=SPEC.feature_dim, hidden_dim=8, out_dim=SPEC.classes)
+    base.update(kw)
+    return GCNConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# (a) registry: second build of the same (graph, cfg) skips preprocessing
+# ---------------------------------------------------------------------------
+
+
+def test_registry_cache_hit_skips_preprocessing(toy_graph, tmp_path):
+    adj_norm, _ = toy_graph
+    cfg = _cfg()
+    reg = ArtifactRegistry(cache_dir=str(tmp_path))
+    g1 = reg.get_or_build(adj_norm, cfg)
+    assert reg.stats.builds == 1 and reg.stats.mem_hits == 0
+    g2 = reg.get_or_build(adj_norm, cfg)
+    assert g2 is g1
+    assert reg.stats.builds == 1 and reg.stats.mem_hits == 1
+
+    # A fresh registry over the same cache dir loads from disk — no build.
+    reg2 = ArtifactRegistry(cache_dir=str(tmp_path))
+    g3 = reg2.get_or_build(adj_norm, cfg)
+    assert reg2.stats.builds == 0 and reg2.stats.disk_hits == 1
+    np.testing.assert_array_equal(g3.pre.ell.cols, g1.pre.ell.cols)
+    np.testing.assert_array_equal(g3.inv, g1.inv)
+
+
+def test_registry_key_sensitivity(toy_graph):
+    adj_norm, _ = toy_graph
+    assert graph_key(adj_norm, _cfg()) != graph_key(adj_norm, _cfg(tau=4))
+    # dims/impl don't change the preprocessed operand -> same key
+    assert graph_key(adj_norm, _cfg()) == graph_key(
+        adj_norm, _cfg(hidden_dim=64, spmm_impl="pallas")
+    )
+
+
+# ---------------------------------------------------------------------------
+# sampler primitives
+# ---------------------------------------------------------------------------
+
+
+def test_sample_k_hop_exact_closure(toy_graph):
+    adj_norm, _ = toy_graph
+    seeds = [3, 17]
+    nodes = sample_k_hop(adj_norm, seeds, hops=2, fanout=None)
+    # scipy oracle: A_hat^2 reachability from the seeds
+    m = adj_norm.to_scipy()
+    x = np.zeros(SPEC.nodes)
+    x[seeds] = 1.0
+    want = np.flatnonzero((x + m @ x + m @ (m @ x)) > 0)
+    np.testing.assert_array_equal(nodes, want)
+
+
+def test_sample_k_hop_fanout_bounds_field(toy_graph):
+    adj_norm, _ = toy_graph
+    seeds = [0, 5, 9]
+    capped = sample_k_hop(adj_norm, seeds, hops=2, fanout=3,
+                          rng=np.random.default_rng(0))
+    full = sample_k_hop(adj_norm, seeds, hops=2, fanout=None)
+    assert set(capped) <= set(full)
+    assert len(capped) <= len(seeds) * (1 + 3 + 9)
+
+
+def test_induced_subgraph_values(toy_graph):
+    adj_norm, _ = toy_graph
+    nodes = np.array([1, 4, 40, 200])
+    sub = induced_subgraph(adj_norm, nodes)
+    want = adj_norm.to_scipy()[nodes][:, nodes].toarray()
+    np.testing.assert_allclose(sub.to_scipy().toarray(), want)
+
+
+def test_empty_query_rejected(toy_graph):
+    adj_norm, _ = toy_graph
+    sampler = SubgraphSampler(adj_norm, _cfg())
+    with pytest.raises(ValueError, match="at least one seed"):
+        sampler.extract([])
+
+
+def test_sampler_meets_tau_bound(toy_graph):
+    adj_norm, _ = toy_graph
+    cfg = _cfg(tau=4)
+    sampler = SubgraphSampler(adj_norm, cfg, fanout=None)
+    sub = sampler.extract([11, 42, 99])
+    ell = sub.graph.pre.ell
+    assert ell.tau == 4
+    assert int((ell.cols != PAD_COL).sum(axis=1).max()) <= 4
+
+
+# ---------------------------------------------------------------------------
+# (b) sampled-subgraph query == full-graph forward rows (fanout >= max deg)
+# ---------------------------------------------------------------------------
+
+
+def test_query_matches_full_forward(toy_graph):
+    adj_norm, feats = toy_graph
+    cfg = _cfg()
+    engine = ServeEngine(adj_norm, feats, cfg, fanout=None, max_seeds=8,
+                         base_bucket_nodes=64)
+    full = engine.full_forward()
+    oracle = np.asarray(
+        gcn_forward(engine.params, engine.graph, feats, cfg), np.float64
+    )
+    np.testing.assert_allclose(full, oracle, rtol=1e-5, atol=1e-5)
+
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        seeds = rng.choice(SPEC.nodes, size=int(rng.integers(1, 6)),
+                           replace=False)
+        out = engine.query(seeds)
+        assert out.shape == (len(seeds), SPEC.classes)
+        np.testing.assert_allclose(out, full[seeds], rtol=1e-4, atol=1e-4)
+
+
+def test_query_batch_matches_single_queries(toy_graph):
+    adj_norm, feats = toy_graph
+    cfg = _cfg()
+    engine = ServeEngine(adj_norm, feats, cfg, fanout=None, max_seeds=8,
+                         max_batch=4, base_bucket_nodes=64)
+    full = engine.full_forward()
+    rng = np.random.default_rng(2)
+    requests = [rng.choice(SPEC.nodes, size=3, replace=False) for _ in range(7)]
+    outs = engine.query_batch(requests)
+    assert len(outs) == len(requests)
+    for seeds, out in zip(requests, outs):
+        np.testing.assert_allclose(out, full[seeds], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# (c) zero recompiles after warmup
+# ---------------------------------------------------------------------------
+
+
+def test_zero_recompiles_after_warmup(toy_graph):
+    adj_norm, feats = toy_graph
+    cfg = _cfg()
+    engine = ServeEngine(adj_norm, feats, cfg, fanout=4, max_seeds=4,
+                         max_batch=8, base_bucket_nodes=64)
+    built = engine.warmup()
+    assert built > 0 and engine.compile_count == built
+
+    rng = np.random.default_rng(3)
+    # 64-request mixed-size sweep: varying seed counts (1..4) and varying
+    # receptive-field sizes, dispatched through both serving paths.
+    requests = [
+        rng.choice(SPEC.nodes, size=int(rng.integers(1, 5)), replace=False)
+        for _ in range(64)
+    ]
+    for seeds in requests[:16]:
+        engine.query(seeds)
+    engine.query_batch(requests[16:])
+    assert engine.compile_count == built, (
+        f"{engine.compile_count - built} post-warmup compilations"
+    )
+
+
+def test_repeated_capped_query_is_deterministic_and_cached(toy_graph):
+    """Fanout sampling is keyed on request contents: an identical repeated
+    query draws the same subgraph, hits the registry instead of re-running
+    the vertex-cut, and returns bit-identical logits."""
+    adj_norm, feats = toy_graph
+    cfg = _cfg()
+    engine = ServeEngine(adj_norm, feats, cfg, fanout=3, max_seeds=4,
+                         base_bucket_nodes=64)
+    out1 = engine.query([5, 77])
+    builds = engine.registry.stats.builds
+    hits = engine.registry.stats.mem_hits
+    out2 = engine.query([5, 77])
+    assert engine.registry.stats.builds == builds
+    assert engine.registry.stats.mem_hits == hits + 1
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_bucket_ladder_covers_full_graph(toy_graph):
+    adj_norm, feats = toy_graph
+    cfg = _cfg()
+    reg = ArtifactRegistry()
+    graph = reg.get_or_build(adj_norm, cfg, persist=False)
+    ladder = BucketLadder.for_graph(graph, cfg, base_nodes=64)
+    top = ladder.entries[-1]
+    assert top.nodes >= graph.n_nodes
+    assert top.rows >= graph.pre.ell.padded_rows
+    # every rung fits some request; escalation never falls off the ladder
+    b = ladder.bucket_for(graph.n_nodes, graph.pre.ell.padded_rows)
+    assert b == top
+    with pytest.raises(ValueError):
+        ladder.bucket_for(top.nodes + 1, 1)
+
+
+# ---------------------------------------------------------------------------
+# bench harness smoke (acceptance: CSV with p50/p99 + tok-equiv throughput)
+# ---------------------------------------------------------------------------
+
+
+def test_bench_serve_smoke(monkeypatch, capsys):
+    from benchmarks import bench_serve
+
+    monkeypatch.setenv("REPRO_DATASETS", "cora")
+    bench_serve.run(requests=6, max_batch=2, seeds_per_request=2, hidden=8,
+                    fanout=8)
+    out = capsys.readouterr().out
+    assert "p50_ms,p99_ms" in out and "tok_equiv_per_s" in out
+    lines = [l for l in out.strip().splitlines() if l.startswith("cora,")]
+    assert {l.split(",")[1] for l in lines} == {"full", "query", "batch"}

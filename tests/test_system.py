@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import preprocess, spmm_ell
 from repro.graphs import load_dataset
@@ -74,6 +75,33 @@ def test_pallas_kernel_in_gcn_layer():
                    block_rows=64, block_k=64, block_f=32)
     np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
                                rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "pallas_sparse"])
+def test_gcn_forward_pallas_impls_match_reference(impl):
+    """Model-level parity: the whole multi-layer gcn_forward through the
+    Pallas kernels (interpret mode on CPU) == the reference path."""
+    from repro.graphs.datasets import DatasetSpec, gcn_normalize, synthesize_adjacency
+    from repro.models.gcn import init_params as gcn_init
+
+    spec = DatasetSpec("tiny", nodes=120, edges=480, feature_dim=12, classes=5)
+    adj_norm = gcn_normalize(synthesize_adjacency(spec, seed=11))
+    feats = jnp.asarray(
+        np.random.default_rng(11)
+        .standard_normal((spec.nodes, spec.feature_dim))
+        .astype(np.float32)
+    )
+    base = GCNConfig(in_dim=spec.feature_dim, hidden_dim=8, out_dim=spec.classes,
+                     tau=4, block_rows=32, block_k=32, block_f=16)
+    graph = GCNGraph.build(adj_norm, base)
+    params = gcn_init(base, jax.random.PRNGKey(4))
+    ref = np.asarray(gcn_forward(params, graph, feats, base))
+
+    import dataclasses
+
+    cfg = dataclasses.replace(base, spmm_impl=impl)
+    got = np.asarray(gcn_forward(params, graph, feats, cfg))
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
 
 
 def test_simulator_headline_claim():
