@@ -19,6 +19,7 @@ from benchmarks import (  # noqa: E402
     bench_flexible_k,
     bench_serve,
     bench_spmm_kernel,
+    bench_spmm_sharded,
     bench_vlen_depth,
 )
 
@@ -33,6 +34,7 @@ def main() -> None:
         ("Fig 12 (buffer sizes)", bench_buffer_sizes),
         ("Fig 13 (VLEN/depth)", bench_vlen_depth),
         ("SpMM kernel", bench_spmm_kernel),
+        ("SpMM sharded (1 vs N devices)", bench_spmm_sharded),
         ("Serving engine", bench_serve),
     ]:
         print(f"\n## {name}")

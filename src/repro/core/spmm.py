@@ -1,12 +1,19 @@
-"""High-level SpMM entry points (reference + kernel dispatch).
+"""High-level SpMM entry points — thin wrappers over ``repro.exec``.
 
 ``spmm_ell`` is the public API: given a preprocessed bounded-row sparse
-operand (:class:`TiledELL`) and a dense matrix, compute ``A @ D``.  The
-implementation can be the pure-jnp reference (always available, any backend)
-or the Pallas kernel (TPU target, validated in interpret mode on CPU).
+operand (:class:`TiledELL`) and a dense matrix, compute ``A @ D``.
+``spmm_ell_arrays`` is the array-level twin for callers that trace the
+operands inside a compiled step (the serving batcher).  Both build an
+:class:`~repro.exec.SpmmPlan` and dispatch through the single
+``repro.exec.execute`` pipeline, which runs single-device or — when the
+plan carries a mesh with a non-trivial ``data`` axis — sharded over that
+axis; there is exactly one pad/dispatch/segment-accumulate implementation
+(``repro.exec.dispatch``), not one per entry point.
 
 Sub-rows produced by the vertex-cut are summed back into their original
-output row (the paper's CMP partial-sum path) with a segment-sum.
+output row (the paper's CMP partial-sum path) with
+:func:`segment_accumulate`; its unjitted core ``_segment_accumulate`` is
+shared with the sharded reduction (``dist.collectives.segment_psum``).
 """
 
 from __future__ import annotations
@@ -18,30 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparse_formats import PAD_COL, TiledELL
-
-
-@partial(jax.jit, static_argnames=("n_out_rows",))
-def _ell_matmul_ref(
-    cols: jax.Array,      # (R, tau) int32, PAD_COL padding
-    vals: jax.Array,      # (R, tau)
-    row_map: jax.Array,   # (R,) int32, -1 padding
-    dense: jax.Array,     # (K, F)
-    n_out_rows: int,
-) -> jax.Array:
-    """Pure-jnp row-wise product oracle.
-
-    out[row_map[i]] += sum_t vals[i, t] * dense[cols[i, t]]   (masked)
-    """
-    mask = (cols != PAD_COL)
-    safe_cols = jnp.where(mask, cols, 0)
-    gathered = dense[safe_cols]                          # (R, tau, F)
-    weighted = gathered * (vals * mask)[..., None]       # (R, tau, F)
-    per_sub_row = weighted.sum(axis=1)                   # (R, F)
-    safe_rows = jnp.where(row_map >= 0, row_map, n_out_rows)
-    out = jnp.zeros((n_out_rows + 1, dense.shape[1]), dense.dtype)
-    out = out.at[safe_rows].add(per_sub_row)
-    return out[:n_out_rows]
+from repro.core.sparse_formats import TiledELL
 
 
 def spmm_ell(
@@ -52,6 +36,9 @@ def spmm_ell(
     block_k: int = 128,
     block_f: int = 128,
     interpret: Optional[bool] = None,
+    *,
+    plan=None,
+    mesh=None,
 ) -> jax.Array:
     """Compute ``A @ dense`` for a preprocessed bounded-row sparse ``A``.
 
@@ -60,26 +47,29 @@ def spmm_ell(
       * ``pallas``    — FlexVector Pallas kernel (dense grid, masked).
       * ``pallas_sparse`` — Pallas kernel with block-skipping grid
         compaction (scalar-prefetch schedule).
-    """
-    cols = jnp.asarray(ell.cols)
-    vals = jnp.asarray(ell.vals, dtype=dense.dtype)
-    row_map = jnp.asarray(ell.row_map)
-    if impl == "reference":
-        return _ell_matmul_ref(cols, vals, row_map, dense, ell.n_orig_rows)
-    if impl in ("pallas", "pallas_sparse"):
-        from repro.kernels import ops  # deferred: keeps core importable alone
 
-        sub = ops.flexvector_spmm(
-            ell,
-            dense,
+    ``plan`` overrides all per-impl keyword arguments with a prebuilt
+    :class:`~repro.exec.SpmmPlan`; ``mesh`` is a shorthand that places the
+    call on a device mesh (sharding the sub-row grid over its ``data``
+    axis when that axis is wider than one device).
+    """
+    from repro.exec import SpmmOperands, SpmmPlan, execute
+
+    if plan is None:
+        plan = SpmmPlan(
+            impl=impl,
             block_rows=block_rows,
             block_k=block_k,
             block_f=block_f,
-            skip_empty=(impl == "pallas_sparse"),
             interpret=interpret,
+            mesh=mesh,
         )
-        return segment_accumulate(sub, row_map, ell.n_orig_rows)
-    raise ValueError(f"unknown impl: {impl}")
+    elif mesh is not None:
+        raise ValueError(
+            "pass placement on the plan (SpmmPlan(mesh=...)), not both "
+            "plan= and mesh="
+        )
+    return execute(plan, SpmmOperands.from_ell(ell), dense)
 
 
 def spmm_ell_arrays(
@@ -93,38 +83,44 @@ def spmm_ell_arrays(
     block_k: int = 128,
     block_f: int = 128,
     interpret: Optional[bool] = None,
+    *,
+    plan=None,
 ) -> jax.Array:
     """Array-level ``spmm_ell``: same math, but fully jit-traceable.
 
-    :func:`spmm_ell` takes the host-side :class:`TiledELL` container and can
-    plan a block-skipping launch schedule from it; this variant takes the
-    ELL arrays directly so callers (the serving batcher) can trace it inside
-    a compiled step with shapes fixed by a bucket ladder.  Operand padding
-    to block multiples happens with ``jnp.pad`` (static shapes), and the
-    Pallas path always uses the masked dense grid — grid compaction needs
-    host-side occupancy planning, which is unavailable under trace, so
-    ``pallas_sparse`` degrades to ``pallas`` here.
+    :func:`spmm_ell` takes the host-side :class:`TiledELL` container and
+    can plan a block-skipping launch schedule from it; this variant takes
+    the ELL arrays directly so callers (the serving batcher) can trace it
+    inside a compiled step with shapes fixed by a bucket ladder.  Grid
+    compaction needs that host container, so a ``pallas_sparse`` plan
+    resolves to the masked dense grid here — with a one-time warning, the
+    switch recorded on the resolved plan (``effective_impl`` /
+    ``degraded_reason``) rather than applied silently.
     """
-    vals = vals.astype(dense.dtype)
-    if impl == "reference":
-        return _ell_matmul_ref(cols, vals, row_map, dense, n_out_rows)
-    if impl in ("pallas", "pallas_sparse"):
-        from repro.kernels import flexvector_spmm as fv  # deferred, as above
+    from repro.exec import SpmmOperands, SpmmPlan, execute
 
-        cols_p, vals_p, dense_p, (r, f) = fv.pad_operands(
-            cols, vals, dense, block_rows, block_k, block_f
-        )
-        sub = fv.spmm_ell_dense_grid(
-            cols_p,
-            vals_p,
-            dense_p,
+    if plan is None:
+        plan = SpmmPlan(
+            impl=impl,
             block_rows=block_rows,
             block_k=block_k,
             block_f=block_f,
             interpret=interpret,
-        )[:r, :f]
-        return segment_accumulate(sub, row_map, n_out_rows)
-    raise ValueError(f"unknown impl: {impl}")
+        )
+    return execute(
+        plan, SpmmOperands.from_arrays(cols, vals, row_map, n_out_rows), dense
+    )
+
+
+def _segment_accumulate(
+    sub_rows: jax.Array, row_map: jax.Array, n_out_rows: int
+) -> jax.Array:
+    """Unjitted segment-accumulate core, shared by the jitted wrapper below,
+    the fused reference path and ``dist.collectives.segment_psum``."""
+    safe = jnp.where(row_map >= 0, row_map, n_out_rows)
+    out = jnp.zeros((n_out_rows + 1, sub_rows.shape[1]), sub_rows.dtype)
+    out = out.at[safe].add(sub_rows)
+    return out[:n_out_rows]
 
 
 @partial(jax.jit, static_argnames=("n_out_rows",))
@@ -132,10 +128,7 @@ def segment_accumulate(
     sub_rows: jax.Array, row_map: jax.Array, n_out_rows: int
 ) -> jax.Array:
     """Sum vertex-cut sub-row partials back into original output rows."""
-    safe = jnp.where(row_map >= 0, row_map, n_out_rows)
-    out = jnp.zeros((n_out_rows + 1, sub_rows.shape[1]), sub_rows.dtype)
-    out = out.at[safe].add(sub_rows)
-    return out[:n_out_rows]
+    return _segment_accumulate(sub_rows, row_map, n_out_rows)
 
 
 def spmm_dense_oracle(ell: TiledELL, dense: np.ndarray) -> np.ndarray:

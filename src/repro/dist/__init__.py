@@ -11,7 +11,8 @@ launch -> serve chain:
 * ``topology``    — ``viable_mesh_shapes`` (degrade the model axis when
                     divisibility fails);
 * ``collectives`` — ``masked_psum_mean`` (straggler-masked gradient
-                    averaging);
+                    averaging) and ``segment_psum`` (the sharded-SpMM
+                    cross-shard partial-product reduction);
 * ``straggler``   — ``StragglerMonitor`` emitting warn/drop verdicts from
                     per-replica step times.
 
@@ -20,7 +21,7 @@ and under ``jax.vmap``-emulated replica axes, so the whole import chain is
 testable without hardware.
 """
 
-from repro.dist.collectives import masked_psum_mean
+from repro.dist.collectives import masked_psum_mean, segment_psum
 from repro.dist.policy import constrain, sharding_policy
 from repro.dist.sharding import ShardingPlan, batch_spec
 from repro.dist.straggler import StragglerMonitor, StragglerVerdict
@@ -34,6 +35,7 @@ __all__ = [
     "batch_spec",
     "constrain",
     "masked_psum_mean",
+    "segment_psum",
     "sharding_policy",
     "viable_mesh_shapes",
 ]

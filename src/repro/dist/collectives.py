@@ -1,4 +1,4 @@
-"""Masked cross-replica reductions.
+"""Masked cross-replica reductions and the sharded-SpMM segment-psum.
 
 ``masked_psum_mean`` is the gradient-averaging primitive behind straggler
 dropping: replicas flagged by ``StragglerMonitor`` contribute a zero
@@ -6,8 +6,15 @@ weight, and the mean renormalizes over the replicas that remain — the
 surviving replicas keep training on an unbiased average instead of
 stalling on (or being poisoned by) the dropped one.
 
-Works under real ``psum`` axes and under ``jax.vmap(..., axis_name=...)``
-emulation, which is how the CPU tests exercise it.
+``segment_psum`` is the reduction behind the sharded SpMM hot path
+(``repro.exec.sharded``): each shard folds its local vertex-cut sub-row
+products into a full-height partial output, then the partials are summed
+across the ``data`` axis into original output rows — the paper's CMP
+partial-sum path stretched across the mesh.
+
+Both work under real ``psum`` axes and under
+``jax.vmap(..., axis_name=...)`` emulation, which is how the CPU tests
+exercise them.
 """
 
 from __future__ import annotations
@@ -31,4 +38,24 @@ def masked_psum_mean(tree: Any, axis: str, alive: jax.Array) -> Any:
         lambda g: jax.lax.psum(g * alive.astype(g.dtype), axis)
         / n_alive.astype(g.dtype),
         tree,
+    )
+
+
+def segment_psum(
+    sub_rows: jax.Array,   # (R_local, F) per-sub-row partial products
+    row_map: jax.Array,    # (R_local,) int32 -> original row, -1 padding
+    n_out_rows: int,
+    axis: str,
+) -> jax.Array:
+    """Fold local sub-row partials into output rows, then psum over ``axis``.
+
+    The local fold is the same segment-accumulate every single-device SpMM
+    path uses (one implementation, imported lazily so ``dist`` keeps its
+    no-upward-imports property at module load); the psum completes rows
+    whose vertex-cut sub-rows landed on different shards.
+    """
+    from repro.core.spmm import _segment_accumulate
+
+    return jax.lax.psum(
+        _segment_accumulate(sub_rows, row_map, n_out_rows), axis
     )

@@ -1,0 +1,42 @@
+"""Execution-plan layer: one planned pipeline behind every SpMM entry point.
+
+Before this package existed the repo had three divergent SpMM paths
+(``spmm_ell``, ``spmm_ell_arrays`` and the serving batcher's AOT trace),
+each with its own pad/dispatch/segment-accumulate copy.  ``repro.exec``
+captures all launch decisions once in an :class:`SpmmPlan` — impl choice,
+block sizes, interpret mode, device placement — and funnels every caller
+through a single :func:`execute` path that runs single-device or sharded
+over the ``data`` mesh axis from the same code:
+
+* ``plan``     — :class:`SpmmPlan` (+ :func:`plan_for_config`) and the
+                 impl-resolution rules, including the recorded
+                 ``pallas_sparse`` -> ``pallas`` degradation under trace;
+* ``operands`` — :class:`SpmmOperands` (array triple + optional host
+                 :class:`~repro.core.sparse_formats.TiledELL` for grid
+                 scheduling) and the per-shard sub-row splitter;
+* ``dispatch`` — :func:`execute`, the one pad/dispatch/segment-accumulate
+                 implementation shared by all entry points;
+* ``sharded``  — :func:`execute_sharded`, ``shard_map`` over the ``data``
+                 axis with a ``dist.collectives.segment_psum`` reduction
+                 of vertex-cut partial products.
+
+Layering: ``exec`` imports ``core``, ``kernels`` and ``dist``; ``core``
+reaches back only through deferred imports inside ``spmm_ell`` /
+``spmm_ell_arrays`` so the import graph stays acyclic.
+"""
+
+from repro.exec.plan import SpmmPlan, plan_for_config
+from repro.exec.operands import ShardedOperands, SpmmOperands, shard_operands
+from repro.exec.dispatch import execute, sub_row_products
+from repro.exec.sharded import execute_sharded
+
+__all__ = [
+    "ShardedOperands",
+    "SpmmOperands",
+    "SpmmPlan",
+    "execute",
+    "execute_sharded",
+    "plan_for_config",
+    "shard_operands",
+    "sub_row_products",
+]

@@ -1,0 +1,126 @@
+"""The single SpMM dispatch path.
+
+Every entry point — ``spmm_ell`` (host :class:`TiledELL`),
+``spmm_ell_arrays`` (traced arrays inside the serving batcher's AOT step)
+and the sharded executor — funnels through :func:`execute`: resolve the
+plan, compute per-sub-row products with the planned impl, fold vertex-cut
+splits back with ``segment_accumulate``.  The pad / impl-switch /
+segment-accumulate logic that used to be duplicated across three call
+sites lives here exactly once.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_formats import PAD_COL, TiledELL
+from repro.core.spmm import segment_accumulate
+from repro.exec.operands import SpmmOperands
+from repro.exec.plan import SpmmPlan
+
+
+def sub_row_products(
+    plan: SpmmPlan,
+    cols: jax.Array,      # (R, tau) int32, PAD_COL padding
+    vals: jax.Array,      # (R, tau), already cast to the dense dtype
+    dense: jax.Array,     # (K, F)
+    ell: Optional[TiledELL] = None,
+) -> jax.Array:
+    """Per-sub-row products ``(R, F)`` with the plan's effective impl.
+
+    The row-wise product core of the paper: each bounded (sub-)row times
+    the dense operand, *before* the CMP partial-sum fold.  ``ell`` is the
+    host container for ``pallas_sparse`` grid compaction; the plan must
+    already be resolved so the impl choice is pinned.
+    """
+    impl = plan.effective_impl
+    assert impl is not None, "resolve() the plan before dispatch"
+    if impl == "reference":
+        return _sub_row_products_ref(cols, vals, dense)
+
+    from repro.kernels import flexvector_spmm as fv  # deferred: keeps exec
+    from repro.core.dataflow import plan_kernel_grid  # importable w/o pallas
+
+    r, f = cols.shape[0], dense.shape[1]
+    cols_p, vals_p, dense_p, _ = fv.pad_operands(
+        cols, vals, dense, plan.block_rows, plan.block_k, plan.block_f
+    )
+    if impl == "pallas_sparse":
+        import numpy as np
+
+        grid = plan_kernel_grid(
+            ell,
+            f,
+            block_rows=plan.block_rows,
+            block_k=plan.block_k,
+            block_f=plan.block_f,
+            skip_empty=True,
+            hot_k_first=plan.hot_k_first,
+        )
+        sub = fv.spmm_ell_sparse_grid(
+            cols_p,
+            vals_p,
+            dense_p,
+            jnp.asarray(grid.pairs[:, 0], jnp.int32),
+            jnp.asarray(grid.pairs[:, 1], jnp.int32),
+            jnp.asarray(grid.first_k.astype(np.int32)),
+            block_rows=plan.block_rows,
+            block_k=plan.block_k,
+            block_f=plan.block_f,
+            out_dtype=plan.out_dtype,
+            interpret=plan.interpret,
+        )
+    else:  # pallas: paper-faithful masked dense grid
+        sub = fv.spmm_ell_dense_grid(
+            cols_p,
+            vals_p,
+            dense_p,
+            block_rows=plan.block_rows,
+            block_k=plan.block_k,
+            block_f=plan.block_f,
+            out_dtype=plan.out_dtype,
+            interpret=plan.interpret,
+        )
+    return sub[:r, :f]
+
+
+def _sub_row_products_ref(cols, vals, dense) -> jax.Array:
+    """Pure-jnp row-wise product oracle (XLA gather), any backend."""
+    mask = cols != PAD_COL
+    safe_cols = jnp.where(mask, cols, 0)
+    gathered = dense[safe_cols]                      # (R, tau, F)
+    return (gathered * (vals * mask)[..., None]).sum(axis=1)
+
+
+@partial(jax.jit, static_argnames=("n_out_rows",))
+def _ref_spmm(cols, vals, row_map, dense, n_out_rows: int) -> jax.Array:
+    """Fused reference path: products + segment fold in one jitted step."""
+    sub = _sub_row_products_ref(cols, vals, dense)
+    return segment_accumulate(sub, row_map, n_out_rows)
+
+
+def execute(plan: SpmmPlan, operands: SpmmOperands, dense: jax.Array) -> jax.Array:
+    """Run one planned SpMM: ``A @ dense`` for the bounded-row sparse ``A``.
+
+    Resolves the plan against the operands (recording any impl
+    degradation), then runs single-device or — when the plan's mesh has a
+    ``data`` axis wider than one device — sharded over that axis with a
+    cross-shard segment-psum.  Both routes share this entry and the
+    per-impl product kernels above.
+    """
+    plan = plan.resolve(schedulable=operands.schedulable)
+    if plan.sharded:
+        from repro.exec.sharded import execute_sharded  # deferred: no cycle
+
+        return execute_sharded(plan, operands, dense)
+    cols = jnp.asarray(operands.cols)
+    vals = jnp.asarray(operands.vals, dtype=dense.dtype)
+    row_map = jnp.asarray(operands.row_map)
+    if plan.effective_impl == "reference":
+        return _ref_spmm(cols, vals, row_map, dense, operands.n_out_rows)
+    sub = sub_row_products(plan, cols, vals, dense, ell=operands.ell)
+    return segment_accumulate(sub, row_map, operands.n_out_rows)

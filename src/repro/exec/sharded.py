@@ -1,0 +1,173 @@
+"""Sharded SpMM execution over the ``data`` mesh axis.
+
+The row-wise, product-based dataflow makes vertex-cut partitions the
+natural unit of parallel work: each shard owns a contiguous slice of the
+sub-row axis (a run of vertex-cut partitions), computes its local sub-row
+products with the *same* kernel the single-device path uses, folds them
+into a full-height partial output with the local segment-accumulate, and
+the partials are reduced into original output rows with the
+``dist.collectives.segment_psum`` cross-shard reduction.  Sub-rows of one
+original row may land on different shards — the psum is exactly the CMP
+partial-sum path of the paper, stretched across the mesh.
+
+``pallas_sparse`` keeps its block-skipping schedule per shard: each
+shard's (row-block, k-tile) pair list is planned host-side from its own
+occupancy, then padded to a common length with no-op visits to a reserved
+all-padding row block (they accumulate exact zeros), so every shard runs
+one identical scalar-prefetched program.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.collectives import segment_psum
+from repro.exec.operands import SpmmOperands, shard_operands
+from repro.exec.plan import SpmmPlan
+
+
+def execute_sharded(
+    plan: SpmmPlan, operands: SpmmOperands, dense: jax.Array
+) -> jax.Array:
+    """``A @ dense`` sharded over ``plan.data_axis``; exact parity with the
+    single-device path for every impl (modulo float summation order)."""
+    plan = plan.resolve(schedulable=operands.schedulable)
+    mesh, axis = plan.mesh, plan.data_axis
+    n_shards = plan.n_shards
+    assert mesh is not None and n_shards > 1
+    impl = plan.effective_impl
+    sh = shard_operands(
+        operands,
+        n_shards,
+        plan.block_rows,
+        reserve_empty_block=(impl == "pallas_sparse"),
+    )
+    dense = jnp.asarray(dense)
+    f = dense.shape[1]
+    n_out = sh.n_out_rows
+    cols = jnp.asarray(sh.cols)
+    vals = jnp.asarray(sh.vals, dtype=dense.dtype)
+    rmap = jnp.asarray(sh.row_map)
+
+    if impl == "reference":
+        from repro.exec.dispatch import _sub_row_products_ref
+
+        def body(c, v, m, d):
+            return segment_psum(_sub_row_products_ref(c, v, d), m, n_out, axis)
+
+        fn = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P(),
+            check_rep=False,  # psum replicates; pallas has no rep rule anyway
+        )
+        return fn(cols, vals, rmap, dense)
+
+    from repro.kernels import flexvector_spmm as fv  # deferred, as in dispatch
+
+    # Shard slices are already block_rows-aligned; this only pads dense.
+    cols, vals, dense_p, _ = fv.pad_operands(
+        cols, vals, dense, plan.block_rows, plan.block_k, plan.block_f
+    )
+
+    if impl == "pallas":
+
+        def body(c, v, m, d):
+            sub = fv.spmm_ell_dense_grid(
+                c,
+                v,
+                d,
+                block_rows=plan.block_rows,
+                block_k=plan.block_k,
+                block_f=plan.block_f,
+                out_dtype=plan.out_dtype,
+                interpret=plan.interpret,
+            )[:, :f]
+            return segment_psum(sub, m, n_out, axis)
+
+        fn = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P(),
+            check_rep=False,
+        )
+        return fn(cols, vals, rmap, dense_p)
+
+    # pallas_sparse: per-shard block-skipping schedules, padded to one length.
+    rb, kb, first = _padded_shard_schedules(plan, sh, f)
+
+    def body(rb_s, kb_s, first_s, c, v, m, d):
+        sub = fv.spmm_ell_sparse_grid(
+            c,
+            v,
+            d,
+            rb_s,
+            kb_s,
+            first_s,
+            block_rows=plan.block_rows,
+            block_k=plan.block_k,
+            block_f=plan.block_f,
+            out_dtype=plan.out_dtype,
+            interpret=plan.interpret,
+        )[:, :f]
+        return segment_psum(sub, m, n_out, axis)
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return fn(
+        jnp.asarray(rb), jnp.asarray(kb), jnp.asarray(first), cols, vals,
+        rmap, dense_p,
+    )
+
+
+def _padded_shard_schedules(plan, sh, feature_dim):
+    """Plan each shard's compacted (row-block, k-tile) pair list and pad all
+    lists to the longest one with no-op visits.
+
+    The no-op targets the reserved trailing all-padding row block of each
+    shard (``reserve_empty_block``): its expansion is all zeros, and the
+    real schedule already zero-initialized it (``plan_kernel_grid`` visits
+    every row block at least once with ``first=1``), so padded steps
+    accumulate nothing.
+    """
+    from repro.core.dataflow import plan_kernel_grid
+
+    grids = [
+        plan_kernel_grid(
+            ell,
+            feature_dim,
+            block_rows=plan.block_rows,
+            block_k=plan.block_k,
+            block_f=plan.block_f,
+            skip_empty=True,
+            hot_k_first=plan.hot_k_first,
+        )
+        for ell in sh.shard_ells
+    ]
+    n_steps = max(len(g.pairs) for g in grids)
+    empty_rb = sh.rows_per_shard // plan.block_rows - 1
+    rb_all, kb_all, first_all = [], [], []
+    for g in grids:
+        pad = n_steps - len(g.pairs)
+        rb_all.append(np.concatenate(
+            [g.pairs[:, 0], np.full(pad, empty_rb, np.int32)]))
+        kb_all.append(np.concatenate(
+            [g.pairs[:, 1], np.zeros(pad, np.int32)]))
+        first_all.append(np.concatenate(
+            [g.first_k.astype(np.int32), np.zeros(pad, np.int32)]))
+    return (
+        np.concatenate(rb_all).astype(np.int32),
+        np.concatenate(kb_all).astype(np.int32),
+        np.concatenate(first_all).astype(np.int32),
+    )

@@ -1,16 +1,19 @@
-"""Jit'd public wrappers around the FlexVector Pallas kernels."""
+"""Public wrapper around the FlexVector Pallas kernels.
+
+Since the execution-plan refactor this is a thin adapter: it builds an
+:class:`~repro.exec.SpmmPlan` for the requested schedule and calls the
+single dispatch path's :func:`~repro.exec.sub_row_products` — the same
+code every ``spmm_ell`` / ``spmm_ell_arrays`` call runs through — so the
+pad / grid-planning / launch logic exists exactly once.
+"""
 
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.dataflow import plan_kernel_grid
 from repro.core.sparse_formats import TiledELL
-from repro.kernels import flexvector_spmm as fv
 
 
 def flexvector_spmm(
@@ -33,42 +36,19 @@ def flexvector_spmm(
     dataflow plan (k-innermost output-stationary, hot k-tiles first,
     empty (row-block, k-tile) cells skipped when ``skip_empty``).
     """
-    k_dim, f_dim = dense.shape
-    cols_p, vals_p, dense_p, _ = fv.pad_operands(
-        ell.cols, ell.vals, dense, block_rows, block_k, block_f
+    from repro.exec import SpmmPlan, sub_row_products
+
+    plan = SpmmPlan(
+        impl="pallas_sparse" if skip_empty else "pallas",
+        block_rows=block_rows,
+        block_k=block_k,
+        block_f=block_f,
+        interpret=interpret,
+        hot_k_first=hot_k_first,
+        out_dtype=out_dtype,
+    ).resolve(schedulable=True)
+    import jax.numpy as jnp
+
+    return sub_row_products(
+        plan, jnp.asarray(ell.cols), jnp.asarray(ell.vals), dense, ell=ell
     )
-    if skip_empty:
-        grid = plan_kernel_grid(
-            ell,
-            f_dim,
-            block_rows=block_rows,
-            block_k=block_k,
-            block_f=block_f,
-            skip_empty=True,
-            hot_k_first=hot_k_first,
-        )
-        out = fv.spmm_ell_sparse_grid(
-            cols_p,
-            vals_p,
-            dense_p,
-            jnp.asarray(grid.pairs[:, 0], jnp.int32),
-            jnp.asarray(grid.pairs[:, 1], jnp.int32),
-            jnp.asarray(grid.first_k.astype(np.int32)),
-            block_rows=block_rows,
-            block_k=block_k,
-            block_f=block_f,
-            out_dtype=out_dtype,
-            interpret=interpret,
-        )
-    else:
-        out = fv.spmm_ell_dense_grid(
-            cols_p,
-            vals_p,
-            dense_p,
-            block_rows=block_rows,
-            block_k=block_k,
-            block_f=block_f,
-            out_dtype=out_dtype,
-            interpret=interpret,
-        )
-    return out[: ell.padded_rows, :f_dim]

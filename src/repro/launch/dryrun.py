@@ -13,14 +13,22 @@ partitioned HLO, and writes a JSON record.  ``--all`` drives every cell in
 a fresh subprocess (isolation: one XLA universe per cell, cached results
 skipped), which is how EXPERIMENTS.md §Dry-run and §Roofline are produced.
 
+Mesh cells are planned through ``dist.topology.viable_mesh_shapes``:
+``--chips``/``--model-parallel`` pick the widest viable (data, model)
+factorization (defaults reproduce the historical 16x16 and 2x16x16
+cells), so awkward chip counts degrade the model axis instead of failing.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k --chips 250 --model-parallel 16   # degrades to 25x10
 """
 
 import argparse
 import dataclasses
 import json
+import math
 import subprocess
 import sys
 import time
@@ -28,6 +36,44 @@ import traceback
 from typing import Dict, Optional
 
 RESULT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+# The 512 placeholder devices above bound what any planned mesh may use.
+MAX_VIRTUAL_CHIPS = 512
+POD_FACTOR = 2  # multi-pod runs replicate the planned pod over this many pods
+
+
+def planned_mesh_shape(chips: int, model_parallel: int,
+                       multi_pod: bool) -> tuple:
+    """Mesh shape for one dry-run cell, via ``dist.topology``.
+
+    Instead of the historical hard-coded 16x16 / 2x16x16 cells, the
+    (data, model) factorization comes from ``viable_mesh_shapes`` — the
+    widest model axis that divides the chip count — so awkward slices
+    (prime counts, TP wider than the slice) degrade instead of asserting.
+    """
+    from repro.dist.topology import viable_mesh_shapes
+
+    total = chips * (POD_FACTOR if multi_pod else 1)
+    if total > MAX_VIRTUAL_CHIPS:
+        raise ValueError(
+            f"{total} chips exceed the {MAX_VIRTUAL_CHIPS} virtual devices "
+            f"this module forces at import"
+        )
+    data, model = viable_mesh_shapes(chips, model_parallel)[0]
+    return (POD_FACTOR, data, model) if multi_pod else (data, model)
+
+
+def mesh_label(shape: tuple) -> str:
+    return "x".join(str(s) for s in shape)
+
+
+def _mesh_context(mesh):
+    """``jax.set_mesh`` across jax versions: older releases (<= 0.4.x) use
+    the Mesh object itself as the context manager."""
+    import jax
+
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
 
 
 def _lower_and_analyze(cfg, shape, mesh, plan, donate: bool):
@@ -56,11 +102,13 @@ def _lower_and_analyze(cfg, shape, mesh, plan, donate: bool):
         donate_argnums = (1,) if donate else ()
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with _mesh_context(mesh):
         lowered = jax.jit(step, donate_argnums=donate_argnums).lower(*args)
         t1 = time.time()
         compiled = lowered.compile()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax <= 0.4.x: per-device dict list
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     return {
@@ -87,7 +135,8 @@ def _reduced_depth(cfg, periods: int):
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              fsdp: Optional[bool] = None, donate: bool = True,
-             body_correction: bool = True) -> Dict:
+             body_correction: bool = True, chips: int = 256,
+             model_parallel: int = 16) -> Dict:
     import jax
 
     from repro.configs import get_config
@@ -102,11 +151,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
+    mesh_shape = planned_mesh_shape(chips, model_parallel, multi_pod)
+    data_w, model_w = mesh_shape[-2], mesh_shape[-1]
     record: Dict = {
         "arch": arch,
         "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
-        "chips": 512 if multi_pod else 256,
+        "mesh": mesh_label(mesh_shape),
+        "chips": int(math.prod(mesh_shape)),
         "kind": shape.kind,
         "params_total": cfg.param_count(),
         "params_active": active_param_count(cfg),
@@ -116,7 +167,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         record["skipped"] = reason
         return record
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod, data=data_w,
+                                model=model_w, pods=POD_FACTOR)
     # FSDP for multi-B models; tiny models stay pure TP+DP.
     if fsdp is None:
         fsdp = cfg.param_count() > 4e9
@@ -180,7 +232,8 @@ def cell_path(arch: str, shape: str, mesh: str) -> str:
 
 
 def drive_all(mesh_mode: str, archs, shapes, timeout: int,
-              workers: int = 2) -> None:
+              workers: int = 2, chips: int = 256,
+              model_parallel: int = 16) -> None:
     from concurrent.futures import ThreadPoolExecutor
 
     from repro.configs import list_archs
@@ -197,13 +250,15 @@ def drive_all(mesh_mode: str, archs, shapes, timeout: int,
 
     def one(cell):
         arch, shp, mp = cell
-        mesh_name = "2x16x16" if mp else "16x16"
+        mesh_name = mesh_label(planned_mesh_shape(chips, model_parallel, mp))
         out = cell_path(arch, shp, mesh_name)
         if os.path.exists(out):
             counts["ok"] += 1
             return
         cmd = [sys.executable, "-m", "repro.launch.dryrun",
-               "--arch", arch, "--shape", shp, "--out", out]
+               "--arch", arch, "--shape", shp, "--out", out,
+               "--chips", str(chips), "--model-parallel",
+               str(model_parallel)]
         if mp:
             # the multipod pass proves the pod axis shards + memory; the
             # roofline table is single-pod, so skip the 3x body compiles
@@ -249,18 +304,26 @@ def main() -> None:
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--no-body-correction", action="store_true")
     ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--chips", type=int, default=256,
+                    help="chips per pod; the (data, model) factorization "
+                         "comes from dist.topology.viable_mesh_shapes")
+    ap.add_argument("--model-parallel", type=int, default=16,
+                    help="upper bound on the model axis width (degrades "
+                         "downward until it divides --chips)")
     args = ap.parse_args()
 
     if args.all:
         drive_all(args.mesh,
                   args.archs.split(",") if args.archs else None,
                   args.shapes.split(",") if args.shapes else None,
-                  args.timeout, workers=args.workers)
+                  args.timeout, workers=args.workers, chips=args.chips,
+                  model_parallel=args.model_parallel)
         return
 
     record = run_cell(args.arch, args.shape, args.multi_pod,
                       fsdp=False if args.no_fsdp else None,
-                      body_correction=not args.no_body_correction)
+                      body_correction=not args.no_body_correction,
+                      chips=args.chips, model_parallel=args.model_parallel)
     text = json.dumps(record, indent=2, default=str)
     print(text)
     if args.out:

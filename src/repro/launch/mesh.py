@@ -14,12 +14,35 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
+import numpy as np
 
 
-def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+def make_production_mesh(
+    *, multi_pod: bool = False, data: int = 16, model: int = 16,
+    pods: int = 2,
+) -> jax.sharding.Mesh:
+    """Build the (pod,) data, model mesh.
+
+    The defaults reproduce the historical 16x16 / 2x16x16 cells; callers
+    (``launch.dryrun``) now derive ``data``/``model`` from
+    ``dist.topology.viable_mesh_shapes`` so awkward chip counts degrade
+    the model axis instead of asserting.
+    """
+    shape = (pods, data, model) if multi_pod else (data, model)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_data_mesh(n_data: int) -> jax.sharding.Mesh:
+    """1-axis ``data`` mesh over the first ``n_data`` local devices — the
+    placement handle for sharded SpMM (``repro.exec``) and the serving
+    batcher's request-granularity sharding."""
+    devs = jax.devices()
+    if n_data < 1 or n_data > len(devs):
+        raise ValueError(
+            f"n_data={n_data} not in [1, {len(devs)}] available devices"
+        )
+    return jax.sharding.Mesh(np.asarray(devs[:n_data]), ("data",))
 
 
 def dp_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

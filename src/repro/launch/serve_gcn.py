@@ -17,6 +17,11 @@ from repro.serve import ServeEngine
 
 
 def build_engine(args) -> ServeEngine:
+    mesh = None
+    if args.mesh > 1:
+        from repro.launch.mesh import make_data_mesh
+
+        mesh = make_data_mesh(args.mesh)
     return ServeEngine.from_dataset(
         args.dataset,
         hidden_dim=16 if args.reduced else args.hidden,
@@ -25,6 +30,7 @@ def build_engine(args) -> ServeEngine:
         max_batch=args.batch,
         max_seeds=max(args.seeds_per_request, 1),
         base_bucket_nodes=args.bucket_base,
+        mesh=mesh,
     )
 
 
@@ -43,6 +49,11 @@ def main() -> None:
                          "fanout/hops (uncapped fanout warms every rung)")
     ap.add_argument("--impl", default="reference",
                     choices=["reference", "pallas", "pallas_sparse"])
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="width of the data mesh axis to shard batched "
+                         "query chunks over (1 = no mesh; needs that many "
+                         "local/virtual devices, e.g. under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     ap.add_argument("--scenario", default="all",
                     choices=["all", "full", "node", "batch"])
     ap.add_argument("--reduced", action="store_true",
@@ -53,9 +64,13 @@ def main() -> None:
     t0 = time.perf_counter()
     built = engine.warmup(max_nodes=args.warmup_max_nodes or None)
     reg = engine.registry.stats
+    plan = engine.batcher.plan
+    impl_note = plan.effective_impl + (
+        f" (degraded from {plan.impl})" if plan.degraded else "")
     print(f"[warmup] {built} bucket executables compiled in "
           f"{time.perf_counter() - t0:.1f}s; ladder "
           f"{[ (b.nodes, b.rows) for b in engine.batcher.ladder.entries ]}; "
+          f"impl {impl_note}; mesh data={args.mesh}; "
           f"registry builds={reg.builds} disk_hits={reg.disk_hits}")
 
     rng = np.random.default_rng(0)

@@ -87,27 +87,33 @@ def gcn_forward(
     graph: GCNGraph,
     features: jax.Array,
     cfg: GCNConfig,
+    plan=None,
+    mesh=None,
 ) -> jax.Array:
     """Full-graph forward pass.
 
     ``features`` are in original node order; the edge-cut permutation is
     applied on entry and inverted on exit, so callers never see permuted
     node ids.
+
+    ``plan`` (an :class:`~repro.exec.SpmmPlan`) or ``mesh`` place the
+    aggregation step: a mesh whose ``data`` axis is wider than one device
+    shards the SpMM row-tile grid over it, with the cross-shard
+    segment-psum folding vertex-cut partials back into output rows.
+    Without either, the plan is derived from ``cfg`` and runs
+    single-device — the same dispatch path either way.
     """
+    if plan is None:
+        from repro.exec import plan_for_config
+
+        plan = plan_for_config(cfg, mesh=mesh)
     perm = jnp.asarray(graph.pre.perm)
     x = features[perm]
     n_layers = len(params)
     for i in range(n_layers):
         p = params[f"layer_{i}"]
         xw = x @ p["w"] + p["b"]                    # combination (dense)
-        x = spmm_ell(                               # aggregation (sparse)
-            graph.pre.ell,
-            xw,
-            impl=cfg.spmm_impl,
-            block_rows=cfg.block_rows,
-            block_k=cfg.block_k,
-            block_f=cfg.block_f,
-        )
+        x = spmm_ell(graph.pre.ell, xw, plan=plan)  # aggregation (sparse)
         if i < n_layers - 1:
             x = jax.nn.relu(x)
     return x[jnp.asarray(graph.inv)]
@@ -120,8 +126,9 @@ def gcn_loss(
     labels: jax.Array,
     cfg: GCNConfig,
     mask: Optional[jax.Array] = None,
+    plan=None,
 ) -> jax.Array:
-    logits = gcn_forward(params, graph, features, cfg)
+    logits = gcn_forward(params, graph, features, cfg, plan=plan)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
     if mask is not None:
@@ -129,8 +136,9 @@ def gcn_loss(
     return nll.mean()
 
 
-def gcn_accuracy(params, graph, features, labels, cfg, mask=None) -> jax.Array:
-    logits = gcn_forward(params, graph, features, cfg)
+def gcn_accuracy(params, graph, features, labels, cfg, mask=None,
+                 plan=None) -> jax.Array:
+    logits = gcn_forward(params, graph, features, cfg, plan=plan)
     correct = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
     if mask is not None:
         return (correct * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.sparse_formats import PAD_COL
 from repro.core.spmm import spmm_ell_arrays
+from repro.exec import plan_for_config
 from repro.models.gcn import GCNConfig, GCNGraph
 from repro.serve.sampler import SampledSubgraph
 
@@ -113,12 +114,24 @@ class MicroBatcher:
         max_batch: int = 8,
         max_seeds: int = 16,
         interpret: Optional[bool] = None,
+        mesh=None,
     ):
         self.cfg = cfg
         self.ladder = ladder
         self.max_batch = max_batch
         self.max_seeds = max_seeds
         self.interpret = interpret
+        # The coalesced forward traces the SpMM on bare arrays, so the plan
+        # resolves here, once: a pallas_sparse config records its degradation
+        # to the masked dense grid (visible to callers/benchmarks as
+        # ``batcher.plan.effective_impl`` / ``.degraded_reason``).  The mesh
+        # is deliberately NOT put on the plan — bucket chunks shard at
+        # request granularity through ``batch_spec`` constraints below, not
+        # through the host-side row-split of ``exec.sharded``.
+        self.plan = plan_for_config(cfg, interpret=interpret).resolve(
+            schedulable=False
+        )
+        self.mesh = mesh
         self.compiles = 0          # executables built (warmup or on-demand)
         self.calls = 0             # coalesced forward invocations
         self._executables: Dict[Tuple[Bucket, int], object] = {}
@@ -178,14 +191,26 @@ class MicroBatcher:
 
     def _make_forward(self, nodes_b: int):
         cfg = self.cfg
-        interpret = self.interpret
-        # pallas_sparse needs host-side grid planning — unavailable under
-        # trace — so the batched path degrades it to the masked dense grid.
-        impl = "pallas" if cfg.spmm_impl == "pallas_sparse" else cfg.spmm_impl
+        plan = self.plan
+        mesh = self.mesh
 
         def fwd(params, cols, vals, row_map, feats, seed_pos):
             b, rows_b, tau = cols.shape
             f_in = feats.shape[-1]
+            if mesh is not None:
+                # Shard the bucket chunk over the data axis at request
+                # granularity: the block-diagonal coalesced operand
+                # partitions cleanly on its leading (batch) dim, and
+                # batch_spec degrades to replication when b is indivisible.
+                from jax.sharding import NamedSharding
+
+                from repro.dist.sharding import batch_spec
+
+                sh = NamedSharding(mesh, batch_spec(mesh, b))
+                cols, vals, row_map, feats, seed_pos = (
+                    jax.lax.with_sharding_constraint(a, sh)
+                    for a in (cols, vals, row_map, feats, seed_pos)
+                )
             # Block-diagonal coalescing: slot i's columns/output rows live in
             # [i * nodes_b, (i+1) * nodes_b), so one kernel call serves all.
             offs = jnp.arange(b, dtype=jnp.int32) * nodes_b
@@ -206,11 +231,7 @@ class MicroBatcher:
                     rmap_f,
                     xw,
                     n_out_rows=b * nodes_b,
-                    impl=impl,
-                    block_rows=cfg.block_rows,
-                    block_k=cfg.block_k,
-                    block_f=cfg.block_f,
-                    interpret=interpret,
+                    plan=plan,
                 )
                 if i < cfg.n_layers - 1:
                     x = jax.nn.relu(x)

@@ -86,6 +86,7 @@ class ServeEngine:
         base_bucket_nodes: int = 256,
         sampler_seed: int = 0,
         interpret: Optional[bool] = None,
+        mesh=None,
     ):
         self.cfg = cfg
         self.adj_norm = adj_norm
@@ -112,6 +113,7 @@ class ServeEngine:
             max_batch=max_batch,
             max_seeds=max_seeds,
             interpret=interpret,
+            mesh=mesh,
         )
         self.timings: Dict[str, List[float]] = {}
         self.seeds_served: Dict[str, int] = {}
