@@ -9,10 +9,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.plan.cost import TPU_V5E  # noqa: E402
 from repro.roofline.analysis import roofline_terms  # noqa: E402
 
 RESULT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
-HBM_BYTES = 16e9  # v5e
+HBM_BYTES = TPU_V5E.hbm_capacity_bytes  # the fits-on-chip line
 
 
 def load():

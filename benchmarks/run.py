@@ -17,6 +17,7 @@ from benchmarks import (  # noqa: E402
     bench_area,
     bench_buffer_sizes,
     bench_flexible_k,
+    bench_plan,
     bench_serve,
     bench_spmm_kernel,
     bench_spmm_sharded,
@@ -35,6 +36,7 @@ def main() -> None:
         ("Fig 13 (VLEN/depth)", bench_vlen_depth),
         ("SpMM kernel", bench_spmm_kernel),
         ("SpMM sharded (1 vs N devices)", bench_spmm_sharded),
+        ("Autoplan vs static plan", bench_plan),
         ("Serving engine", bench_serve),
     ]:
         print(f"\n## {name}")

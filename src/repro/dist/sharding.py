@@ -17,15 +17,24 @@ Leaves stacked for scan-over-layers (paths under ``blocks/`` or
 axis.  Every rule is divisibility-guarded: an axis is only ever named when
 it divides the dim, so the plan degrades to full replication on a trivial
 1-device mesh instead of crashing.
+
+The roles generate an ordered *candidate list* per leaf and the winner is
+the candidate with the lowest estimated per-step collective bytes
+(``repro.plan.cost.rank_specs`` — the same cost model behind SpMM
+autoplanning), not simply the first viable one.  Ties break to the
+earlier candidate, which preserves the historical role priority wherever
+the cost model is indifferent.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.plan import cost
 
 # last path component -> tensor-parallel role
 _COL = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b",
@@ -58,43 +67,66 @@ class ShardingPlan:
     # -- parameters ---------------------------------------------------------
 
     def param_spec(self, name: str, shape: Sequence[int]) -> P:
+        cands = self._param_candidates(name, shape)
+        return P(*cands[cost.rank_specs(self.mesh, shape, cands)])
+
+    def _param_candidates(
+        self, name: str, shape: Sequence[int]
+    ) -> List[Tuple]:
+        """Ordered candidate specs, most-preferred role first.
+
+        Each candidate is divisibility-viable by construction; the final
+        entry is always full replication, so the list is never empty and
+        the plan degrades gracefully on a trivial mesh.
+        """
         parts = [p for p in name.split("/") if p]
         leaf = parts[-1] if parts else name
         ndim = len(shape)
-        spec: list = [None] * ndim
         lo = 1 if parts and parts[0] in _STACKED else 0
 
         def fits(dim: int, size: int) -> bool:
             return size > 1 and dim % size == 0
 
+        def base_with(idx: int) -> list:
+            s: list = [None] * ndim
+            s[idx] = model
+            return s
+
         model = self.model_axis
         msize = self.mesh.shape[model] if model else 0
+        bases: List[list] = []
         if model and ndim - lo >= 2:
             if leaf == "embed":
                 if fits(shape[0], msize):
-                    spec[0] = model          # vocab-parallel
-                elif fits(shape[1], msize):
-                    spec[1] = model
+                    bases.append(base_with(0))   # vocab-parallel
+                if fits(shape[1], msize):
+                    bases.append(base_with(1))
             elif leaf in _ROW:
                 # MoE down is (E, W, D): the contracting dim is still -2
                 if ndim - lo == 3 and fits(shape[lo], msize):
-                    spec[lo] = model         # expert parallelism
-                elif fits(shape[ndim - 2], msize):
-                    spec[ndim - 2] = model
+                    bases.append(base_with(lo))  # expert parallelism
+                if fits(shape[ndim - 2], msize):
+                    bases.append(base_with(ndim - 2))
             elif leaf in _COL:
                 if ndim - lo == 3 and leaf != "lm_head" \
                         and fits(shape[lo], msize):
-                    spec[lo] = model         # expert parallelism
-                elif fits(shape[ndim - 1], msize):
-                    spec[ndim - 1] = model
+                    bases.append(base_with(lo))  # expert parallelism
+                if fits(shape[ndim - 1], msize):
+                    bases.append(base_with(ndim - 1))
+        bases.append([None] * ndim)
 
-        if self.fsdp and self.fsdp_axis:
-            dsize = self.mesh.shape[self.fsdp_axis]
-            for i in sorted(range(lo, ndim), key=lambda i: -shape[i]):
-                if spec[i] is None and fits(shape[i], dsize):
-                    spec[i] = self.fsdp_axis
-                    break
-        return P(*spec)
+        cands: List[Tuple] = []
+        for base in bases:
+            if self.fsdp and self.fsdp_axis:
+                dsize = self.mesh.shape[self.fsdp_axis]
+                for i in sorted(range(lo, ndim), key=lambda i: -shape[i]):
+                    if base[i] is None and fits(shape[i], dsize):
+                        aug = list(base)
+                        aug[i] = self.fsdp_axis
+                        cands.append(tuple(aug))
+                        break
+            cands.append(tuple(base))
+        return cands
 
     def shard_params(self, tree: Any) -> Any:
         def one(path, leaf):
@@ -130,15 +162,21 @@ class ShardingPlan:
 
 
 def _dp_entry(mesh, dp: Tuple[str, ...], dim: int):
-    """Widest suffix of the dp axes that divides ``dim`` (dropping ``pod``
-    first, mirroring the fallback order of the ``constrain`` call sites),
-    or None when even the innermost axis does not fit."""
-    for i in range(len(dp)):
-        cand = dp[i:]
-        size = _axes_size(mesh, cand)
-        if size > 1 and dim % size == 0:
-            return cand if len(cand) > 1 else cand[0]
-    return None
+    """Cheapest dp-axis suffix that divides ``dim``, by estimated
+    collective bytes (suffixes drop ``pod`` first, mirroring the fallback
+    order of the ``constrain`` call sites — the cost model prefers the
+    widest viable suffix and ties keep that order), or None when even the
+    innermost axis does not fit."""
+    viable = [
+        dp[i:]
+        for i in range(len(dp))
+        if _axes_size(mesh, dp[i:]) > 1 and dim % _axes_size(mesh, dp[i:]) == 0
+    ]
+    if not viable:
+        return None
+    specs = [(c if len(c) > 1 else c[0],) for c in viable]
+    chosen = viable[cost.rank_specs(mesh, (dim,), specs)]
+    return chosen if len(chosen) > 1 else chosen[0]
 
 
 def batch_spec(mesh, global_batch: int) -> P:

@@ -25,7 +25,11 @@ reaches back only through deferred imports inside ``spmm_ell`` /
 ``spmm_ell_arrays`` so the import graph stays acyclic.
 """
 
-from repro.exec.plan import SpmmPlan, plan_for_config
+from repro.exec.plan import (
+    SpmmPlan,
+    plan_for_config,
+    reset_degradation_warnings,
+)
 from repro.exec.operands import ShardedOperands, SpmmOperands, shard_operands
 from repro.exec.dispatch import execute, sub_row_products
 from repro.exec.sharded import execute_sharded
@@ -37,6 +41,7 @@ __all__ = [
     "execute",
     "execute_sharded",
     "plan_for_config",
+    "reset_degradation_warnings",
     "shard_operands",
     "sub_row_products",
 ]

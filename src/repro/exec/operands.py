@@ -7,12 +7,15 @@ host container around when it exists is what lets the dispatcher plan the
 block-skipping ``pallas_sparse`` schedule; bare arrays resolve to the
 masked dense grid instead (see ``exec.plan``).
 
-:func:`shard_operands` splits the sub-row axis into equal contiguous
-slices, one per ``data``-axis shard.  Sub-rows are the vertex-cut unit of
-work (each contiguous run of sub-rows is a run of vertex-cut partitions),
-so a contiguous split maps partitions 1:1 onto shards; every shard
+:func:`shard_operands` splits the sub-row axis into contiguous slices,
+one per ``data``-axis shard.  Sub-rows are the vertex-cut unit of work
+(each contiguous run of sub-rows is a run of vertex-cut partitions), so a
+contiguous split maps partitions 1:1 onto shards; every shard
 segment-accumulates its local partial products and the sharded executor
-reduces them with a cross-shard psum.
+reduces them with a cross-shard psum.  The boundaries are nnz-weighted by
+default (``repro.plan.cost.balanced_split_points``): on power-law graphs
+a uniform row count per shard leaves the hub-owning shard with most of
+the nonzeros, and the whole psum waits on it.
 """
 
 from __future__ import annotations
@@ -24,6 +27,7 @@ import jax
 import numpy as np
 
 from repro.core.sparse_formats import PAD_COL, TiledELL
+from repro.plan import cost
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,12 +98,18 @@ def shard_operands(
     n_shards: int,
     block_rows: int,
     reserve_empty_block: bool = False,
+    split: str = "nnz",
 ) -> ShardedOperands:
-    """Split the sub-row axis into ``n_shards`` equal contiguous slices.
+    """Split the sub-row axis into ``n_shards`` contiguous slices.
 
-    Every slice is padded to the same block-aligned ``rows_per_shard``
-    (PAD_COL cols, zero vals, -1 row_map) so the shards run one identical
-    program on different data.  ``reserve_empty_block`` appends one
+    ``split="nnz"`` (default) places the boundaries with the cost model's
+    weighted splitter so every shard owns ~the same number of nonzeros —
+    the load-balance fix for power-law rows; ``split="uniform"`` is the
+    historical equal-row-count split (kept for parity tests and as the
+    fallback when no nonzero counts exist).  Either way every slice is
+    padded to the same block-aligned ``rows_per_shard`` (PAD_COL cols,
+    zero vals, -1 row_map) so the shards run one identical program on
+    different data.  ``reserve_empty_block`` appends one
     guaranteed-all-padding row block per shard: the sharded
     ``pallas_sparse`` schedule pads shorter shard pair-lists with no-op
     visits to that block (adds exact zeros), equalizing scalar-prefetch
@@ -110,12 +120,19 @@ def shard_operands(
             "shard_operands needs concrete (host) operands: the per-shard "
             "split and grid schedules are planned host-side"
         )
+    if split not in ("nnz", "uniform"):
+        raise ValueError(f"unknown split: {split}")
     cols = np.asarray(operands.cols)
     vals = np.asarray(operands.vals)
     rmap = np.asarray(operands.row_map)
     r, tau = cols.shape
-    base = -(-max(r, 1) // n_shards)
-    per = _round_up(base, block_rows)
+    if split == "nnz":
+        weights = (cols != PAD_COL).sum(axis=1)
+        bounds = cost.balanced_split_points(weights, n_shards)
+    else:
+        bounds = cost.balanced_split_points(np.zeros(r), n_shards)
+    seg_len = int(np.diff(bounds).max()) if n_shards else 0
+    per = _round_up(max(seg_len, 1), block_rows)
     if reserve_empty_block:
         per += block_rows
     out_cols = np.full((n_shards * per, tau), PAD_COL, dtype=np.int32)
@@ -123,7 +140,7 @@ def shard_operands(
     out_rmap = np.full((n_shards * per,), -1, dtype=np.int32)
     shard_ells = []
     for s in range(n_shards):
-        lo, hi = s * base, min((s + 1) * base, r)
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
         n = max(hi - lo, 0)
         out_cols[s * per : s * per + n] = cols[lo:hi]
         out_vals[s * per : s * per + n] = vals[lo:hi]

@@ -35,6 +35,18 @@ def _warn_once(reason: str) -> None:
         warnings.warn(reason, RuntimeWarning, stacklevel=4)
 
 
+def reset_degradation_warnings() -> None:
+    """Clear the process-global warn-once registry.
+
+    The registry is deliberately global (a degradation should be surfaced
+    once per process, not once per call site), which makes warn-once
+    assertions order-dependent under pytest; the autouse fixture in
+    ``tests/conftest.py`` calls this before every test so each starts from
+    a clean registry.
+    """
+    _DEGRADE_WARNED.clear()
+
+
 @dataclasses.dataclass(frozen=True)
 class SpmmPlan:
     """Immutable execution plan for one SpMM configuration.
@@ -55,6 +67,7 @@ class SpmmPlan:
     out_dtype: Optional[object] = None  # kernel accumulator override
     mesh: Optional[jax.sharding.Mesh] = None
     data_axis: str = "data"
+    shard_split: str = "nnz"          # sub-row split: nnz-weighted | uniform
     effective_impl: Optional[str] = None
     degraded_reason: Optional[str] = None
 
@@ -62,6 +75,11 @@ class SpmmPlan:
         if self.impl not in VALID_IMPLS:
             raise ValueError(
                 f"unknown impl: {self.impl} (expected one of {VALID_IMPLS})"
+            )
+        if self.shard_split not in ("nnz", "uniform"):
+            raise ValueError(
+                f"unknown shard_split: {self.shard_split} "
+                "(expected 'nnz' or 'uniform')"
             )
 
     # -- placement ----------------------------------------------------------
@@ -114,9 +132,34 @@ def plan_for_config(
     cfg,
     mesh: Optional[jax.sharding.Mesh] = None,
     interpret: Optional[bool] = None,
+    *,
+    ell=None,
+    feature_dim: Optional[int] = None,
+    n_devices: Optional[int] = None,
 ) -> SpmmPlan:
     """Build a plan from a :class:`~repro.models.gcn.GCNConfig`-like object
-    (anything with ``spmm_impl``/``block_rows``/``block_k``/``block_f``)."""
+    (anything with ``spmm_impl``/``block_rows``/``block_k``/``block_f``).
+
+    Without ``ell`` this is the *static* plan: the config's impl and block
+    sizes, placed on ``mesh``.  With ``ell`` (a host
+    :class:`~repro.core.sparse_formats.TiledELL`) the choice routes
+    through the cost model instead: ``repro.plan.autoplan`` enumerates
+    impl x block sizes x viable data-mesh widths and returns the
+    argmin-cost plan (never costed worse than the static default, which is
+    always a candidate).  ``feature_dim`` defaults to the config's hidden
+    width — the dominant SpMM feature dimension in a GCN stack.
+    """
+    if ell is not None:
+        from repro.plan.autoplan import autoplan  # deferred: no cycle
+
+        return autoplan(
+            ell,
+            feature_dim or getattr(cfg, "hidden_dim", 128),
+            cfg,
+            mesh=mesh,
+            n_devices=n_devices,
+            interpret=interpret,
+        )
     return SpmmPlan(
         impl=cfg.spmm_impl,
         block_rows=cfg.block_rows,

@@ -10,6 +10,11 @@ the partials are reduced into original output rows with the
 original row may land on different shards — the psum is exactly the CMP
 partial-sum path of the paper, stretched across the mesh.
 
+The sub-row boundaries are nnz-weighted by default (the cost model's
+``balanced_split_points``; ``SpmmPlan.shard_split="uniform"`` restores
+the historical equal-row-count split), so a hub-heavy shard does not
+serialize the cross-shard psum behind its extra nonzeros.
+
 ``pallas_sparse`` keeps its block-skipping schedule per shard: each
 shard's (row-block, k-tile) pair list is planned host-side from its own
 occupancy, then padded to a common length with no-op visits to a reserved
@@ -39,12 +44,20 @@ def execute_sharded(
     mesh, axis = plan.mesh, plan.data_axis
     n_shards = plan.n_shards
     assert mesh is not None and n_shards > 1
+    n_sub_rows = int((np.asarray(operands.row_map) >= 0).sum())
+    if n_shards > max(n_sub_rows, 1):
+        raise ValueError(
+            f"mesh '{axis}' axis is {n_shards} devices wide but the operand "
+            f"has only {n_sub_rows} vertex-cut sub-rows to distribute; use "
+            f"a mesh with '{axis}' <= {max(n_sub_rows, 1)}"
+        )
     impl = plan.effective_impl
     sh = shard_operands(
         operands,
         n_shards,
         plan.block_rows,
         reserve_empty_block=(impl == "pallas_sparse"),
+        split=plan.shard_split,
     )
     dense = jnp.asarray(dense)
     f = dense.shape[1]

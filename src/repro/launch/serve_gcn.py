@@ -31,6 +31,7 @@ def build_engine(args) -> ServeEngine:
         max_seeds=max(args.seeds_per_request, 1),
         base_bucket_nodes=args.bucket_base,
         mesh=mesh,
+        autoplan=args.autoplan,
     )
 
 
@@ -49,6 +50,10 @@ def main() -> None:
                          "fanout/hops (uncapped fanout warms every rung)")
     ap.add_argument("--impl", default="reference",
                     choices=["reference", "pallas", "pallas_sparse"])
+    ap.add_argument("--autoplan", action="store_true",
+                    help="pick a per-bucket SpMM plan (impl + block sizes) "
+                         "with the repro.plan cost model at warmup instead "
+                         "of one config-derived default for every bucket")
     ap.add_argument("--mesh", type=int, default=1,
                     help="width of the data mesh axis to shard batched "
                          "query chunks over (1 = no mesh; needs that many "
@@ -72,6 +77,12 @@ def main() -> None:
           f"{[ (b.nodes, b.rows) for b in engine.batcher.ladder.entries ]}; "
           f"impl {impl_note}; mesh data={args.mesh}; "
           f"registry builds={reg.builds} disk_hits={reg.disk_hits}")
+    if args.autoplan:
+        for (bucket, _), bplan in sorted(
+                engine.batcher._bucket_plans.items()):
+            print(f"[autoplan] bucket ({bucket.nodes}, {bucket.rows}): "
+                  f"{bplan.effective_impl} rows={bplan.block_rows} "
+                  f"k={bplan.block_k} f={bplan.block_f}")
 
     rng = np.random.default_rng(0)
     n_nodes = engine.graph.n_nodes

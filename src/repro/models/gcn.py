@@ -101,9 +101,20 @@ def gcn_forward(
     shards the SpMM row-tile grid over it, with the cross-shard
     segment-psum folding vertex-cut partials back into output rows.
     Without either, the plan is derived from ``cfg`` and runs
-    single-device — the same dispatch path either way.
+    single-device — the same dispatch path either way.  ``plan="auto"``
+    hands the choice to the cost model instead: ``repro.plan.autoplan``
+    picks impl, block sizes and data-mesh width by estimated traffic for
+    *this* graph (``mesh`` then bounds the candidate widths).
     """
-    if plan is None:
+    if isinstance(plan, str):
+        if plan != "auto":
+            raise ValueError(f"unknown plan: {plan!r} (expected 'auto')")
+        from repro.exec import plan_for_config
+
+        plan = plan_for_config(
+            cfg, mesh=mesh, ell=graph.pre.ell, feature_dim=cfg.hidden_dim
+        )
+    elif plan is None:
         from repro.exec import plan_for_config
 
         plan = plan_for_config(cfg, mesh=mesh)

@@ -1,0 +1,53 @@
+"""repro.plan — one cost model behind every plan decision.
+
+* ``cost``     — pure traffic/energy/roofline terms over graph stats and
+                 a device model (no jax; importable from anywhere);
+* ``autoplan`` — enumerate candidate :class:`~repro.exec.SpmmPlan`s
+                 (impl x block sizes x viable data meshes) and return the
+                 argmin-cost plan.
+
+``cost`` is imported eagerly (it is the dependency-light leaf that
+``exec``/``dist``/``serve`` call into); ``autoplan`` is loaded lazily
+because it imports ``repro.exec`` and eager loading would cycle.
+"""
+
+from repro.plan import cost
+from repro.plan.cost import (
+    CostBreakdown,
+    DeviceModel,
+    GraphStats,
+    TPU_V5E,
+    balanced_split_points,
+    flexvector_device,
+    grad_sync_bytes,
+    graph_stats_from_ell,
+    rank_specs,
+    roofline_seconds,
+    spmm_cost,
+    synthetic_stats,
+)
+
+__all__ = [
+    "CostBreakdown",
+    "DeviceModel",
+    "GraphStats",
+    "TPU_V5E",
+    "autoplan",
+    "balanced_split_points",
+    "cost",
+    "flexvector_device",
+    "grad_sync_bytes",
+    "graph_stats_from_ell",
+    "rank_specs",
+    "roofline_seconds",
+    "spmm_cost",
+    "synthetic_stats",
+]
+
+
+def __getattr__(name):
+    if name == "autoplan":
+        import repro.plan.autoplan as _autoplan
+
+        return _autoplan
+    raise AttributeError(f"module 'repro.plan' has no attribute {name!r}")

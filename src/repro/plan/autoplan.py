@@ -1,0 +1,167 @@
+"""Cost-model SpMM plan selection.
+
+Enumerate candidate :class:`~repro.exec.SpmmPlan`s — impl x block sizes x
+viable data-mesh widths (from ``dist.topology.viable_mesh_shapes``) —
+score each with :func:`repro.plan.cost.spmm_cost`, and return the
+argmin-cost plan.  The static default (the plan ``exec.plan_for_config``
+would have built from the config alone) is always the first candidate, so
+autoplan can never choose a plan the cost model ranks worse than it, and
+ties keep the static choice.  Enumeration order is fixed and the argmin is
+strict, so the same graph + device budget always yields the same plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from repro.core.sparse_formats import TiledELL
+from repro.dist.topology import viable_mesh_shapes
+from repro.exec.plan import VALID_IMPLS, SpmmPlan
+from repro.plan import cost as cost_mod
+
+BLOCK_CANDIDATES = (16, 32, 64, 128)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanChoice:
+    """An autoplan decision with its receipts."""
+
+    plan: SpmmPlan
+    cost: cost_mod.CostBreakdown
+    static_plan: SpmmPlan
+    static_cost: cost_mod.CostBreakdown
+    n_candidates: int
+
+    def describe(self) -> str:
+        p = self.plan
+        width = p.n_shards
+        return (
+            f"{p.impl} rows={p.block_rows} k={p.block_k} f={p.block_f} "
+            f"data={width} (bound {self.cost.seconds:.3e}s vs static "
+            f"{self.static_cost.seconds:.3e}s)"
+        )
+
+
+def candidate_widths(n_devices: int) -> Tuple[int, ...]:
+    """Data-axis widths viable on ``n_devices`` chips, ascending — the
+    ``data`` values of every (data, model) factorization."""
+    return tuple(sorted({d for d, _ in viable_mesh_shapes(n_devices,
+                                                          n_devices)}))
+
+
+def _as_stats(graph) -> cost_mod.GraphStats:
+    if isinstance(graph, cost_mod.GraphStats):
+        return graph
+    if isinstance(graph, TiledELL):
+        return cost_mod.graph_stats_from_ell(graph)
+    raise TypeError(
+        f"autoplan wants a TiledELL or GraphStats, got {type(graph).__name__}"
+    )
+
+
+def choose_plan(
+    graph,
+    feature_dim: int,
+    cfg=None,
+    *,
+    impls: Optional[Sequence[str]] = None,
+    mesh=None,
+    n_devices: Optional[int] = None,
+    block_candidates: Sequence[int] = BLOCK_CANDIDATES,
+    interpret: Optional[bool] = None,
+    dtype_bytes: int = 4,
+    device: cost_mod.DeviceModel = cost_mod.TPU_V5E,
+    schedulable: Optional[bool] = None,
+) -> PlanChoice:
+    """Pick the argmin-cost plan for one graph + device budget.
+
+    ``graph`` is a host :class:`TiledELL` (exact occupancy) or a
+    :class:`~repro.plan.cost.GraphStats` (planned shapes, e.g. a serving
+    bucket).  ``mesh`` restricts the placement candidates to {1, its data
+    width}; otherwise widths are enumerated from ``n_devices`` (default 1
+    — the planner never touches jax device state unasked).
+    ``schedulable`` says whether the execution context can plan the
+    ``pallas_sparse`` block-skipping grid host-side; when it cannot, that
+    impl is excluded instead of being costed as something it will not run.
+    """
+    stats = _as_stats(graph)
+    if schedulable is None:
+        schedulable = stats.ell is not None
+
+    base_impl = getattr(cfg, "spmm_impl", "reference") if cfg else "reference"
+    base_blocks = tuple(
+        getattr(cfg, name, 128) if cfg else 128
+        for name in ("block_rows", "block_k", "block_f")
+    )
+    if impls is None:
+        impls = (base_impl,) + tuple(
+            i for i in VALID_IMPLS if i != base_impl)
+    impls = tuple(
+        i for i in impls if schedulable or i != "pallas_sparse"
+    ) or ("reference",)
+
+    if mesh is not None:
+        mesh_width = (
+            int(mesh.shape["data"]) if "data" in dict(mesh.shape) else 1)
+        widths: Tuple[int, ...] = tuple(sorted({1, mesh_width}))
+    else:
+        mesh_width = 1
+        widths = candidate_widths(max(n_devices or 1, 1))
+    widths = tuple(
+        w for w in widths if w == 1 or w <= max(stats.n_sub_rows, 1))
+
+    def blocks_for(base: int) -> Tuple[int, ...]:
+        return tuple(sorted(set(block_candidates) | {base}))
+
+    def score(impl, br, bk, bf, width):
+        return cost_mod.spmm_cost(
+            stats, feature_dim, impl=impl, block_rows=br, block_k=bk,
+            block_f=bf, n_shards=width, dtype_bytes=dtype_bytes,
+            device=device,
+        )
+
+    # The static default leads: what plan_for_config(cfg[, mesh]) builds.
+    static_impl = base_impl if (
+        schedulable or base_impl != "pallas_sparse") else "pallas"
+    static_cost = score(static_impl, *base_blocks, mesh_width)
+    best = (static_impl, *base_blocks, mesh_width)
+    best_cost = static_cost
+
+    n_cand = 1
+    for impl in impls:
+        for br in blocks_for(base_blocks[0]):
+            for bk in blocks_for(base_blocks[1]):
+                for bf in blocks_for(base_blocks[2]):
+                    for w in widths:
+                        n_cand += 1
+                        c = score(impl, br, bk, bf, w)
+                        if c.seconds < best_cost.seconds:
+                            best, best_cost = (impl, br, bk, bf, w), c
+
+    impl, br, bk, bf, width = best
+    if width <= 1:
+        chosen_mesh = None
+    elif mesh is not None and width == mesh_width:
+        chosen_mesh = mesh
+    else:
+        from repro.launch.mesh import make_data_mesh  # deferred: jax devices
+
+        chosen_mesh = make_data_mesh(width)
+    plan = SpmmPlan(
+        impl=impl, block_rows=br, block_k=bk, block_f=bf,
+        interpret=interpret, mesh=chosen_mesh,
+    )
+    static_plan = SpmmPlan(
+        impl=base_impl, block_rows=base_blocks[0], block_k=base_blocks[1],
+        block_f=base_blocks[2], interpret=interpret, mesh=mesh,
+    )
+    return PlanChoice(
+        plan=plan, cost=best_cost, static_plan=static_plan,
+        static_cost=static_cost, n_candidates=n_cand,
+    )
+
+
+def autoplan(graph, feature_dim: int, cfg=None, **kw) -> SpmmPlan:
+    """:func:`choose_plan` without the receipts."""
+    return choose_plan(graph, feature_dim, cfg, **kw).plan

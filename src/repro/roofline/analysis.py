@@ -21,9 +21,13 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
-PEAK_FLOPS = 197e12          # bf16 per chip
-HBM_BW = 819e9               # bytes/s per chip
-ICI_BW = 50e9                # bytes/s per link
+from repro.plan.cost import TPU_V5E, roofline_seconds
+
+# Back-compat aliases: the chip peaks now live on the shared device model
+# (repro.plan.cost), which is also what autoplanning normalizes against.
+PEAK_FLOPS = TPU_V5E.peak_flops      # bf16 per chip
+HBM_BW = TPU_V5E.hbm_bw              # bytes/s per chip
+ICI_BW = TPU_V5E.ici_bw              # bytes/s per link
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -93,11 +97,9 @@ def roofline_terms(
     chips: int,
     model_flops_total: float,
 ) -> RooflineTerms:
-    compute = flops_per_device / PEAK_FLOPS
-    memory = bytes_per_device / HBM_BW
-    collective = coll_bytes_per_device / ICI_BW
-    terms = {"compute": compute, "memory": memory, "collective": collective}
-    dominant = max(terms, key=terms.get)
+    compute, memory, collective, dominant = roofline_seconds(
+        flops_per_device, bytes_per_device, coll_bytes_per_device, TPU_V5E
+    )
     total_hlo = flops_per_device * chips
     return RooflineTerms(
         compute_s=compute,

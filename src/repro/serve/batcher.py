@@ -52,6 +52,7 @@ def _round_up(x: int, q: int) -> int:
 @dataclasses.dataclass(frozen=True)
 class BucketLadder:
     entries: Tuple[Bucket, ...]   # ascending
+    mean_row_nnz: float = 0.0     # graph's mean nnz per sub-row (cost stats)
 
     @staticmethod
     def for_graph(
@@ -62,13 +63,18 @@ class BucketLadder:
     ) -> "BucketLadder":
         """Geometric ladder capped by the full graph's operand.
 
-        ``rows = nodes * ceil(full_ell_rows / full_nodes)`` ties the ELL-row
-        budget to the graph's own vertex-cut expansion factor; the top entry
-        covers the whole graph, so escalation always terminates.
+        The per-rung ELL-row budget comes from the cost model's graph
+        statistics: ``rows = nodes * stats.rows_per_node`` ties it to the
+        graph's own vertex-cut expansion factor, and ``mean_row_nnz`` is
+        carried on the ladder so per-bucket autoplanning can estimate a
+        rung's nonzero count before any request has landed in it.  The top
+        entry covers the whole graph, so escalation always terminates.
         """
+        from repro.plan import cost
+
+        stats = cost.graph_stats_from_ell(full_graph.pre.ell)
         n_nodes = full_graph.n_nodes
-        full_rows = full_graph.pre.ell.padded_rows
-        rows_factor = -(-full_rows // max(n_nodes, 1))
+        rows_factor = stats.rows_per_node
         top_nodes = _round_up(n_nodes, cfg.block_k)
         entries: List[Bucket] = []
         nodes = min(_round_up(base_nodes, cfg.block_k), top_nodes)
@@ -78,7 +84,9 @@ class BucketLadder:
             if nodes >= top_nodes:
                 break
             nodes = min(nodes * growth, top_nodes)
-        return BucketLadder(entries=tuple(entries))
+        return BucketLadder(
+            entries=tuple(entries), mean_row_nnz=stats.mean_row_nnz
+        )
 
     def bucket_for(self, n_sub_nodes: int, n_ell_rows: int) -> Bucket:
         for b in self.entries:
@@ -115,6 +123,7 @@ class MicroBatcher:
         max_seeds: int = 16,
         interpret: Optional[bool] = None,
         mesh=None,
+        autoplan: bool = False,
     ):
         self.cfg = cfg
         self.ladder = ladder
@@ -131,10 +140,55 @@ class MicroBatcher:
         self.plan = plan_for_config(cfg, interpret=interpret).resolve(
             schedulable=False
         )
+        self.autoplan = autoplan
         self.mesh = mesh
         self.compiles = 0          # executables built (warmup or on-demand)
         self.calls = 0             # coalesced forward invocations
         self._executables: Dict[Tuple[Bucket, int], object] = {}
+        self._bucket_plans: Dict[Tuple[Bucket, int], object] = {}
+
+    def plan_for_bucket(self, bucket: Bucket, feature_dim: int):
+        """The plan one ladder rung traces with.
+
+        With ``autoplan`` off this is the single config-derived plan
+        (historical behaviour).  With it on, each rung gets its own
+        argmin-cost plan: the rung's padded shape plus the graph's mean
+        sub-row nnz (carried on the ladder) form synthetic graph stats,
+        and ``repro.plan.autoplan`` picks impl and block sizes for that
+        shape.  ``pallas_sparse`` is excluded — the coalesced forward
+        traces bare arrays, so it could never run here anyway — and no
+        mesh candidates are offered (bucket chunks shard at request
+        granularity, not through the host-side row split).
+        """
+        if not self.autoplan:
+            return self.plan
+        key = (bucket, feature_dim)
+        plan = self._bucket_plans.get(key)
+        if plan is None:
+            from repro.plan import cost
+            from repro.plan.autoplan import choose_plan
+
+            stats = cost.synthetic_stats(
+                rows=bucket.rows,
+                n_out_rows=bucket.nodes,
+                n_dense_rows=bucket.nodes,
+                nnz=max(
+                    int(bucket.rows
+                        * (self.ladder.mean_row_nnz or self.cfg.tau / 2)), 1
+                ),
+                tau=self.cfg.tau,
+            )
+            choice = choose_plan(
+                stats,
+                feature_dim,
+                self.cfg,
+                impls=("reference", "pallas"),
+                interpret=self.interpret,
+                schedulable=False,
+            )
+            plan = choice.plan.resolve(schedulable=False)
+            self._bucket_plans[key] = plan
+        return plan
 
     # ------------------------------------------------------------------
     # Request preparation
@@ -189,9 +243,10 @@ class MicroBatcher:
     # Coalesced execution
     # ------------------------------------------------------------------
 
-    def _make_forward(self, nodes_b: int):
+    def _make_forward(self, bucket: Bucket, feature_dim: int):
         cfg = self.cfg
-        plan = self.plan
+        plan = self.plan_for_bucket(bucket, feature_dim)
+        nodes_b = bucket.nodes
         mesh = self.mesh
 
         def fwd(params, cols, vals, row_map, feats, seed_pos):
@@ -266,7 +321,7 @@ class MicroBatcher:
         key = (bucket, batch, feature_dim, p_sig)
         exe = self._executables.get(key)
         if exe is None:
-            fwd = jax.jit(self._make_forward(bucket.nodes))
+            fwd = jax.jit(self._make_forward(bucket, feature_dim))
             exe = fwd.lower(*self._avals(params, bucket, batch, feature_dim)).compile()
             self.compiles += 1
             self._executables[key] = exe

@@ -87,6 +87,7 @@ class ServeEngine:
         sampler_seed: int = 0,
         interpret: Optional[bool] = None,
         mesh=None,
+        autoplan: bool = False,
     ):
         self.cfg = cfg
         self.adj_norm = adj_norm
@@ -114,6 +115,7 @@ class ServeEngine:
             max_seeds=max_seeds,
             interpret=interpret,
             mesh=mesh,
+            autoplan=autoplan,
         )
         self.timings: Dict[str, List[float]] = {}
         self.seeds_served: Dict[str, int] = {}

@@ -1,0 +1,18 @@
+"""Test-suite wide fixtures."""
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _fresh_degradation_registry():
+    """Reset ``exec.plan``'s process-global warn-once registry per test.
+
+    The registry is intentionally global at runtime (one warning per
+    degradation reason per process); without this reset, any test that
+    asserts on the warning would depend on which test triggered the
+    degradation first.
+    """
+    from repro.exec.plan import reset_degradation_warnings
+
+    reset_degradation_warnings()
+    yield

@@ -86,7 +86,9 @@ def test_plan_rejects_unknown_impl():
 
 
 def test_pallas_sparse_degradation_recorded_and_warned_once():
-    plan_mod._DEGRADE_WARNED.clear()
+    # the autouse fixture in conftest.py already reset the registry; the
+    # explicit call documents the dependency and covers direct invocation
+    plan_mod.reset_degradation_warnings()
     plan = SpmmPlan(impl="pallas_sparse", block_rows=16, block_k=16,
                     block_f=16)
     with warnings.catch_warnings(record=True) as caught:
