@@ -1,0 +1,145 @@
+"""Async serving runtime benchmark: open-loop Poisson load sweep.
+
+Drives the ``repro.runtime`` deadline-aware queue with an open-loop
+Poisson arrival process (the generator never waits for the server, so
+overload actually overloads) across several offered-load levels, and
+reports what a serving operator cares about per level:
+
+* e2e p50/p99 of completed requests (ms),
+* goodput — requests completed *within their deadline* per second,
+* shed rate — admission rejections + queued-then-expired, over offered.
+
+One CSV block, plus the standard BENCH json
+(``results/bench/queue_async.json``; ``REPRO_BENCH_DIR`` relocates it)
+with one record per offered-QPS level.  Smoke mode (CI) keeps the sweep
+to a few dozen requests per level.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+# run.py-style bootstrap so `python benchmarks/bench_queue.py` works alone.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+BENCH_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+
+SMOKE_QPS = (50.0, 150.0, 400.0)
+FULL_QPS = (50.0, 100.0, 200.0, 400.0, 800.0)
+
+
+def _build_engine(hidden: int, fanout: int, max_batch: int, max_seeds: int):
+    from repro.serve import ServeEngine
+
+    engine = ServeEngine.from_dataset(
+        "cora",
+        hidden_dim=hidden,
+        fanout=fanout,
+        max_batch=max_batch,
+        max_seeds=max_seeds,
+    )
+    engine.warmup()
+    return engine
+
+
+def bench_level(
+    engine,
+    qps: float,
+    n_requests: int,
+    deadline_ms: float,
+    capacity: int,
+    seeds_per_request: int,
+    rng: np.random.Generator,
+) -> dict:
+    from repro.runtime import run_open_loop
+
+    requests = [
+        rng.choice(engine.graph.n_nodes, size=seeds_per_request,
+                   replace=False)
+        for _ in range(n_requests)
+    ]
+    with engine.runtime(capacity=capacity) as rt:
+        wall = run_open_loop(
+            rt,
+            requests,
+            qps=qps,
+            deadline_s=deadline_ms / 1e3,
+            rng=rng,
+        )
+
+    snap = rt.metrics.snapshot()
+    c = snap["counters"]
+    e2e = snap["latency_ms"]["e2e_s"]
+    return {
+        "offered_qps": qps,
+        "offered": c["submitted"],
+        "completed": c["completed"],
+        "shed": (c["rejected_queue_full"] + c["rejected_infeasible"]
+                 + c["shed_expired"]),
+        "shed_rate": snap["derived"]["shed_rate"],
+        "p50_ms": e2e["p50"],
+        "p99_ms": e2e["p99"],
+        "goodput_rps": c["slo_met"] / max(wall, 1e-9),
+        "slo_attainment": snap["derived"]["slo_attainment"],
+        "batches_full": c["batches_full"],
+        "batches_deadline": c["batches_deadline"],
+        "deadline_ms": deadline_ms,
+        "wall_s": wall,
+    }
+
+
+def run(
+    csv=print,
+    smoke: bool = True,
+    n_requests: int = 48,
+    deadline_ms: float = 200.0,
+    capacity: int = 64,
+    hidden: int = 16,
+    fanout: int = 8,
+    max_batch: int = 8,
+    seeds_per_request: int = 2,
+) -> dict:
+    csv("qps,offered,completed,shed,shed_rate,p50_ms,p99_ms,"
+        "goodput_rps,slo_attainment")
+    engine = _build_engine(hidden, fanout, max_batch, seeds_per_request)
+    built = engine.compile_count
+    rng = np.random.default_rng(0)
+    records = []
+    for qps in (SMOKE_QPS if smoke else FULL_QPS):
+        rec = bench_level(engine, qps, n_requests, deadline_ms, capacity,
+                          seeds_per_request, rng)
+        rec["compiles_post_warmup"] = engine.compile_count - built
+        records.append(rec)
+        csv(f"{qps:.0f},{rec['offered']},{rec['completed']},{rec['shed']},"
+            f"{rec['shed_rate']:.3f},{rec['p50_ms']:.2f},"
+            f"{rec['p99_ms']:.2f},{rec['goodput_rps']:.1f},"
+            f"{rec['slo_attainment']:.3f}")
+    payload = {"benchmark": "queue_async", "smoke": smoke,
+               "deadline_ms": deadline_ms, "records": records}
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    json_path = os.path.join(BENCH_DIR, "queue_async.json")
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--requests", type=int, default=48,
+                    help="requests per offered-load level")
+    ap.add_argument("--deadline-ms", type=float, default=200.0)
+    ap.add_argument("--capacity", type=int, default=64)
+    args = ap.parse_args()
+    run(smoke=args.smoke or not args.full, n_requests=args.requests,
+        deadline_ms=args.deadline_ms, capacity=args.capacity)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,7 @@ from benchmarks import (  # noqa: E402
     bench_buffer_sizes,
     bench_flexible_k,
     bench_plan,
+    bench_queue,
     bench_serve,
     bench_spmm_kernel,
     bench_spmm_sharded,
@@ -38,6 +39,7 @@ def main() -> None:
         ("SpMM sharded (1 vs N devices)", bench_spmm_sharded),
         ("Autoplan vs static plan", bench_plan),
         ("Serving engine", bench_serve),
+        ("Async queue (open-loop Poisson)", bench_queue),
     ]:
         print(f"\n## {name}")
         t = time.time()

@@ -1,11 +1,13 @@
-"""GCN serving launcher: full-graph, single-node, and batched-query
-scenarios on the FlexVector SpMM core.
+"""GCN serving launcher: full-graph, single-node, batched-query and
+async-runtime scenarios on the FlexVector SpMM core.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_gcn --dataset cora \
       --requests 64 --batch 8 --fanout 16
   PYTHONPATH=src python -m repro.launch.serve_gcn --dataset cora \
       --requests 32 --reduced          # CI smoke configuration
+  PYTHONPATH=src python -m repro.launch.serve_gcn --dataset cora \
+      --requests 64 --reduced --runtime-async --deadline-ms 200 --qps 100
 """
 
 import argparse
@@ -22,6 +24,10 @@ def build_engine(args) -> ServeEngine:
         from repro.launch.mesh import make_data_mesh
 
         mesh = make_data_mesh(args.mesh)
+    growth = None
+    if args.ladder_growth:
+        growth = "auto" if args.ladder_growth == "auto" \
+            else float(args.ladder_growth)
     return ServeEngine.from_dataset(
         args.dataset,
         hidden_dim=16 if args.reduced else args.hidden,
@@ -32,7 +38,44 @@ def build_engine(args) -> ServeEngine:
         base_bucket_nodes=args.bucket_base,
         mesh=mesh,
         autoplan=args.autoplan,
+        ladder_growth=growth,
     )
+
+
+def run_async_scenario(engine: ServeEngine, requests, args) -> None:
+    """Open-loop Poisson load through the deadline-aware runtime
+    (``repro.runtime.loadgen`` — the same driver ``bench_queue.py``
+    measures with), reporting the SLO picture from the metrics registry.
+    """
+    from repro.runtime import run_open_loop
+
+    with engine.runtime(capacity=args.queue_capacity) as rt:
+        wall = run_open_loop(
+            rt,
+            requests,
+            qps=args.qps,
+            deadline_s=args.deadline_ms / 1e3,
+            rng=np.random.default_rng(1),
+        )
+
+    snap = rt.metrics.snapshot()
+    c = snap["counters"]
+    e2e = snap["latency_ms"]["e2e_s"]
+    goodput = c["slo_met"] / max(wall, 1e-9)
+    print(
+        f"async: offered {c['submitted']} @ {args.qps:.0f} qps, "
+        f"completed {c['completed']}, "
+        f"shed {c['rejected_queue_full'] + c['rejected_infeasible'] + c['shed_expired']} "
+        f"(rate {snap['derived']['shed_rate']:.3f}); "
+        f"e2e p50 {e2e['p50']:.2f} ms p99 {e2e['p99']:.2f} ms; "
+        f"SLO({args.deadline_ms:.0f}ms) attainment "
+        f"{snap['derived']['slo_attainment']:.3f}, "
+        f"goodput {goodput:.1f} req/s; batches "
+        f"full={c['batches_full']} deadline={c['batches_deadline']}"
+    )
+    if args.metrics_json:
+        rt.metrics.write_json(args.metrics_json)
+        print(f"[metrics] snapshot written to {args.metrics_json}")
 
 
 def main() -> None:
@@ -63,6 +106,27 @@ def main() -> None:
                     choices=["all", "full", "node", "batch"])
     ap.add_argument("--reduced", action="store_true",
                     help="small hidden dim (CI smoke configuration)")
+    ap.add_argument("--ladder-growth", default=None,
+                    help="bucket ladder growth factor (float), or 'auto' "
+                         "for the cost-model search; default: 4, or auto "
+                         "when --autoplan is set")
+    ap.add_argument("--runtime-async", action="store_true",
+                    help="drive the batched scenario through the async "
+                         "deadline-aware repro.runtime worker loop "
+                         "(open-loop Poisson arrivals) instead of the "
+                         "synchronous query_batch facade")
+    ap.add_argument("--deadline-ms", type=float, default=200.0,
+                    help="per-request SLO for --runtime-async (absolute "
+                         "deadline = arrival + this)")
+    ap.add_argument("--qps", type=float, default=100.0,
+                    help="offered load for --runtime-async (Poisson "
+                         "arrival rate, requests/s)")
+    ap.add_argument("--queue-capacity", type=int, default=256,
+                    help="bounded queue size for --runtime-async "
+                         "(admission sheds beyond it)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the runtime metrics snapshot to this path "
+                         "after --runtime-async")
     args = ap.parse_args()
 
     engine = build_engine(args)
@@ -104,9 +168,13 @@ def main() -> None:
         print(engine.report("query", wall_s=time.perf_counter() - t0).line())
 
     if args.scenario in ("all", "batch"):
-        t0 = time.perf_counter()
-        engine.query_batch(requests)
-        print(engine.report("batch", wall_s=time.perf_counter() - t0).line())
+        if args.runtime_async:
+            run_async_scenario(engine, requests, args)
+        else:
+            t0 = time.perf_counter()
+            engine.query_batch(requests)
+            print(engine.report(
+                "batch", wall_s=time.perf_counter() - t0).line())
 
     print(f"[post-warmup compiles] {engine.compile_count - built} "
           f"(warmup built {built}); batcher calls {engine.batcher.calls}; "

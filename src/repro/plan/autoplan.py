@@ -165,3 +165,93 @@ def choose_plan(
 def autoplan(graph, feature_dim: int, cfg=None, **kw) -> SpmmPlan:
     """:func:`choose_plan` without the receipts."""
     return choose_plan(graph, feature_dim, cfg, **kw).plan
+
+
+# ---------------------------------------------------------------------------
+# Serving bucket-ladder growth factor
+# ---------------------------------------------------------------------------
+
+GROWTH_CANDIDATES = (1.3, 1.5, 2.0, 4.0)
+
+
+def choose_ladder_growth(
+    stats,
+    cfg,
+    *,
+    base_nodes: int,
+    top_nodes: int,
+    candidates: Sequence[float] = GROWTH_CANDIDATES,
+    feature_dim: Optional[int] = None,
+    horizon: int = 256,
+    n_probes: int = 33,
+    device: cost_mod.DeviceModel = cost_mod.TPU_V5E,
+) -> float:
+    """Pick the serving bucket ladder's growth factor with the cost model.
+
+    The tradeoff: a finer ladder (small growth) pads each request to a
+    tighter rung — less wasted SpMM work per query — but multiplies the
+    rung count, and every rung costs a warmup compile *and* an execution
+    of that rung's shape to prime it.  Score each candidate as
+
+        E_s[cost(rung(s))]  +  sum_r cost(r) / horizon
+
+    where ``s`` ranges over ``n_probes`` geometric probe sizes between
+    the base and top rung (serving receptive fields span orders of
+    magnitude, so the size distribution is modelled log-uniform),
+    ``rung(s)`` is the smallest rung covering ``s``, ``cost`` is the
+    per-rung :func:`repro.plan.cost.spmm_cost` roofline bound over the
+    graph's own statistics (``rows_per_node``, ``mean_row_nnz``), and the
+    second term amortizes one priming execution per rung over a
+    ``horizon`` of expected requests.  Deterministic: fixed probe set,
+    fixed candidate order, strict argmin with earlier candidates winning
+    ties.
+    """
+    import math
+
+    stats = _as_stats(stats) if not isinstance(
+        stats, cost_mod.GraphStats) else stats
+    if feature_dim is None:
+        feature_dim = max(
+            getattr(cfg, "hidden_dim", 128), getattr(cfg, "out_dim", 1))
+    rows_factor = stats.rows_per_node
+    mean_nnz = stats.mean_row_nnz or cfg.tau / 2
+
+    def rung_cost(nodes: int) -> float:
+        # One representative SpMM per rung (relative comparison across
+        # candidates only), priced by the same bucket-cost arithmetic the
+        # runtime's admission estimator uses.
+        rows = -(-int(nodes * rows_factor) // cfg.block_rows) * cfg.block_rows
+        return cost_mod.bucket_forward_seconds(
+            rows=rows,
+            n_out_rows=nodes,
+            mean_row_nnz=mean_nnz,
+            tau=cfg.tau,
+            f_dims=(feature_dim,),
+            impl=cfg.spmm_impl,
+            block_rows=cfg.block_rows, block_k=cfg.block_k,
+            block_f=cfg.block_f, device=device,
+        )
+
+    base = min(base_nodes, top_nodes)
+    if base >= top_nodes:
+        return float(candidates[0])
+    ratio = top_nodes / base
+    probes = [
+        min(int(math.ceil(base * ratio ** (i / (n_probes - 1)))), top_nodes)
+        for i in range(n_probes)
+    ]
+
+    from repro.serve.batcher import ladder_rungs
+
+    best_growth, best_score = None, None
+    for growth in candidates:
+        rungs = ladder_rungs(base, top_nodes, growth, cfg.block_k)
+        costs = [rung_cost(n) for n in rungs]
+        expected = 0.0
+        for s in probes:
+            idx = next(i for i, n in enumerate(rungs) if n >= s)
+            expected += costs[idx]
+        score = expected / len(probes) + sum(costs) / max(horizon, 1)
+        if best_score is None or score < best_score:
+            best_growth, best_score = growth, score
+    return float(best_growth)

@@ -317,6 +317,49 @@ def spmm_cost(
     )
 
 
+def bucket_forward_seconds(
+    rows: int,
+    n_out_rows: int,
+    mean_row_nnz: float,
+    tau: int,
+    f_dims: Sequence[int],
+    *,
+    impl: str = "reference",
+    block_rows: int = 128,
+    block_k: int = 128,
+    block_f: int = 128,
+    device: "DeviceModel" = None,
+) -> float:
+    """Roofline seconds of one forward over a *planned* serving-bucket
+    shape: ``rows`` ELL sub-rows at the graph's mean occupancy, one SpMM
+    per entry of ``f_dims`` (each layer's output width).
+
+    The single bucket-cost arithmetic behind both the runtime's admission
+    estimator (``repro.runtime.queue.BucketEstimator``) and the ladder
+    growth search (``repro.plan.autoplan.choose_ladder_growth``) — the
+    two must price a rung with the same model or admission and ladder
+    selection disagree.  ``pallas_sparse`` is priced as ``pallas``: a
+    bucket exists only as a plan, with no host operand to schedule the
+    block-skipping grid from.
+    """
+    device = device or TPU_V5E
+    stats = synthetic_stats(
+        rows=rows,
+        n_out_rows=n_out_rows,
+        n_dense_rows=n_out_rows,
+        nnz=max(int(rows * mean_row_nnz), 1),
+        tau=tau,
+    )
+    impl = "pallas" if impl == "pallas_sparse" else impl
+    return sum(
+        spmm_cost(
+            stats, f, impl=impl, block_rows=block_rows, block_k=block_k,
+            block_f=block_f, device=device,
+        ).seconds
+        for f in f_dims
+    )
+
+
 # ---------------------------------------------------------------------------
 # Weighted contiguous splits (exec.sharded's sub-row partitioner)
 # ---------------------------------------------------------------------------

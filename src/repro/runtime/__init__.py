@@ -1,0 +1,47 @@
+"""repro.runtime — async deadline-aware serving runtime.
+
+The missing layer between the warmed SpMM serving core (`repro.serve`)
+and real traffic: a bounded request queue with cost-model admission
+control, a deadline-aware batch-closing scheduler (EDF within priority
+tiers), a worker loop resolving a ``Future`` per request through the
+AOT-compiled bucket executables, and an SLO metrics registry — all
+scheduled through a swappable clock so every decision is deterministic
+under test.
+"""
+
+from repro.runtime.clock import Clock, RealClock, VirtualClock
+from repro.runtime.loadgen import run_open_loop
+from repro.runtime.loop import RuntimeLoop, ServeRuntime
+from repro.runtime.metrics import Histogram, MetricsRegistry
+from repro.runtime.queue import (
+    AdmissionError,
+    BucketEstimator,
+    DeadlineExceededError,
+    DeadlineInfeasibleError,
+    FixedEstimator,
+    QueueFullError,
+    Request,
+    RequestQueue,
+)
+from repro.runtime.scheduler import BatchScheduler, ClosedBatch
+
+__all__ = [
+    "Clock",
+    "RealClock",
+    "VirtualClock",
+    "Histogram",
+    "MetricsRegistry",
+    "AdmissionError",
+    "QueueFullError",
+    "DeadlineInfeasibleError",
+    "DeadlineExceededError",
+    "Request",
+    "RequestQueue",
+    "BucketEstimator",
+    "FixedEstimator",
+    "BatchScheduler",
+    "ClosedBatch",
+    "RuntimeLoop",
+    "ServeRuntime",
+    "run_open_loop",
+]

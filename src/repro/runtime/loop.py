@@ -1,0 +1,340 @@
+"""Worker loop: drain closed batches through the warmed executables.
+
+:class:`RuntimeLoop` turns the scheduler's pure ``poll`` into a running
+service.  One daemon thread waits until the next close trigger (or a
+submit notification), closes batches, and executes each through a
+``runner`` callback, resolving every request's ``Future``:
+
+* a batch that **raises** fails only its own requests' futures — the
+  exception is attached to each of them — and the loop moves on to the
+  next batch; nothing wedges;
+* ``shutdown`` is idempotent and exception-safe: the first call stops
+  and joins the thread, later calls are no-ops, and a crashed batch
+  never prevents shutdown.
+
+The loop is equally drivable *without* its thread: :meth:`step` performs
+one poll-and-execute round inline, which is how the virtual-clock tests
+and the synchronous facade use it.
+
+:class:`ServeRuntime` assembles the whole subsystem around a
+:class:`~repro.serve.engine.ServeEngine`: queue + scheduler + loop +
+metrics, with ``submit(seeds, deadline, priority) -> Request`` as the
+async entry point.  Execution goes through the engine's micro-batcher —
+the same AOT executables the synchronous paths warmed — so the
+zero-recompile-after-warmup invariant holds across the async runtime by
+construction (``engine.compile_count`` still proves it).
+"""
+
+from __future__ import annotations
+
+import threading
+import traceback
+from concurrent.futures import InvalidStateError
+from typing import Callable, List, Optional, Sequence
+
+from repro.runtime.clock import Clock, RealClock
+from repro.runtime.metrics import MetricsRegistry
+from repro.runtime.queue import (
+    BucketEstimator,
+    Request,
+    RequestQueue,
+)
+from repro.runtime.scheduler import BatchScheduler, ClosedBatch
+
+#: runner(batch) -> one output per batch request, in request order.
+Runner = Callable[[ClosedBatch], Sequence]
+
+_IDLE_WAIT_S = 0.05   # wait bound while the queue is empty
+
+
+class RuntimeLoop:
+    def __init__(
+        self,
+        scheduler: BatchScheduler,
+        runner: Runner,
+        *,
+        clock: Optional[Clock] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        name: str = "repro-runtime",
+    ):
+        self.scheduler = scheduler
+        self.runner = runner
+        self.clock = clock or scheduler.clock
+        self.metrics = metrics or scheduler.metrics
+        self.name = name
+        self._cond = threading.Condition()
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+
+    def notify(self) -> None:
+        """Wake the worker (new submission, cancellation, shutdown)."""
+        with self._cond:
+            self._cond.notify_all()
+
+    def step(self, now: Optional[float] = None) -> int:
+        """One poll-and-execute round on the calling thread."""
+        executed = 0
+        for batch in self.scheduler.poll(now):
+            self.execute(batch)
+            executed += 1
+        return executed
+
+    def drain(self) -> int:
+        """Flush the queue and execute everything inline (sync path)."""
+        executed = 0
+        for batch in self.scheduler.poll():
+            self.execute(batch)
+            executed += 1
+        for batch in self.scheduler.flush():
+            self.execute(batch)
+            executed += 1
+        return executed
+
+    def execute(self, batch: ClosedBatch) -> None:
+        """Run one batch; on failure, fail only this batch's futures."""
+        live = [r for r in batch.requests if not r.future.cancelled()]
+        t0 = self.clock.now()
+        try:
+            outputs = self.runner(batch)
+        except BaseException as e:  # noqa: BLE001 — must not kill the loop
+            for r in live:
+                if not r.future.done():
+                    try:
+                        r.future.set_exception(e)
+                    except InvalidStateError:
+                        continue     # caller cancelled between check and set
+            self.metrics.inc("failed", len(live))
+            return
+        if len(outputs) != len(batch.requests):
+            # A buggy runner must not strand the unmatched tail futures.
+            err = RuntimeError(
+                f"runner returned {len(outputs)} outputs for "
+                f"{len(batch.requests)} requests")
+            for r in live:
+                if not r.future.done():
+                    try:
+                        r.future.set_exception(err)
+                    except InvalidStateError:
+                        continue
+            self.metrics.inc("failed", len(live))
+            return
+        t1 = self.clock.now()
+        if self.scheduler.estimator is not None:
+            self.scheduler.estimator.observe(
+                batch.bucket, self.scheduler.padded_width(len(batch.requests)),
+                t1 - t0)
+        for r, out in zip(batch.requests, outputs):
+            if r.future.cancelled() or r.future.done():
+                continue
+            # Timing fields land before set_result: a waiter wakes the
+            # instant the result is set and may read them immediately.
+            r.wait_s = batch.closed_at - r.arrival
+            r.exec_s = t1 - t0
+            try:
+                r.future.set_result(out)
+            except InvalidStateError:
+                continue             # caller cancelled between check and set
+            self.metrics.observe("wait_s", r.wait_s)
+            self.metrics.observe("exec_s", r.exec_s)
+            self.metrics.observe("e2e_s", r.prep_s + (t1 - r.arrival))
+            if r.deadline is not None:
+                self.metrics.inc(
+                    "slo_met" if t1 <= r.deadline else "slo_missed")
+            self.metrics.inc("completed")
+
+    # ------------------------------------------------------------------
+
+    def start(self) -> "RuntimeLoop":
+        if self._thread is not None:
+            return self
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._run, name=self.name, daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                if self._stop:
+                    return
+                next_close = self.scheduler.next_close_time()
+                now = self.clock.now()
+                if next_close is None:
+                    self._cond.wait(_IDLE_WAIT_S)
+                elif next_close > now:
+                    if getattr(self.clock, "manual", False):
+                        # Manually-driven time advances by explicit steps,
+                        # not by waiting; re-poll on every notification.
+                        self._cond.wait(_IDLE_WAIT_S)
+                    else:
+                        self._cond.wait(
+                            min(next_close - now, _IDLE_WAIT_S * 20))
+                if self._stop:
+                    return
+            try:
+                self.step()
+            except BaseException:  # noqa: BLE001
+                # execute() already isolates runner failures per batch;
+                # anything reaching here is a scheduler/bookkeeping bug —
+                # surface it, but never let it kill the worker and strand
+                # every queued future.
+                traceback.print_exc()
+
+    def shutdown(self, timeout: Optional[float] = 5.0) -> None:
+        """Stop and join the worker; idempotent, never raises on re-entry."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        thread, self._thread = self._thread, None
+        if thread is not None and thread is not threading.current_thread():
+            thread.join(timeout)
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+
+class ServeRuntime:
+    """Async deadline-aware serving on top of a warmed ``ServeEngine``.
+
+    ``submit`` prepares the request on the calling thread (sampling +
+    bucket padding — bounded work, and the bucket is what admission
+    estimates against), then admits it into the bounded queue; the worker
+    loop closes and executes batches.  ``deadline_s`` is relative to the
+    runtime clock at submit time; pass ``deadline=None`` for best-effort.
+    ``max_wait_s`` (default 50 ms) bounds a *best-effort* request's
+    sojourn in a partially-filled bucket so deadline-less traffic always
+    makes progress (deadline-carrying requests keep their own
+    deadline-aware close trigger); pass ``None`` for pure
+    deadline/full-trigger closing, where a best-effort request closes
+    only when its bucket fills or on ``drain``.
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        capacity: Optional[int] = 256,
+        clock: Optional[Clock] = None,
+        estimator=None,
+        metrics: Optional[MetricsRegistry] = None,
+        max_wait_s: Optional[float] = 0.05,
+        close_margin_s: Optional[float] = None,
+        calibration: float = 1.0,
+        graph_key: Optional[str] = None,
+    ):
+        from repro.serve.registry import graph_key as graph_key_fn
+
+        self.engine = engine
+        self.clock = clock or RealClock()
+        self.metrics = metrics or MetricsRegistry()
+        # The content hash is O(nnz); callers that build runtimes
+        # repeatedly over one engine (the query_batch facade) pass the
+        # key they already computed.
+        self.graph_key = graph_key or graph_key_fn(engine.adj_norm,
+                                                   engine.cfg)
+        self.estimator = estimator or BucketEstimator(
+            engine.cfg,
+            engine.batcher.ladder,
+            calibration=calibration,
+        )
+        self.queue = RequestQueue(
+            capacity=capacity,
+            clock=self.clock,
+            estimator=self.estimator,
+            metrics=self.metrics,
+        )
+        if close_margin_s is None:
+            # Real clocks carry worker wake-up jitter; manually-driven
+            # clocks are stepped exactly, so deterministic tests keep 0.
+            close_margin_s = 0.0 if getattr(self.clock, "manual", False) \
+                else 0.005
+        self.scheduler = BatchScheduler(
+            self.queue,
+            max_batch=engine.batcher.max_batch,
+            batch_sizes=engine.batcher.batch_ladder(),
+            max_wait_s=max_wait_s,
+            close_margin_s=close_margin_s,
+        )
+        self.loop = RuntimeLoop(self.scheduler, self._run_batch)
+
+    # ------------------------------------------------------------------
+
+    def _run_batch(self, batch: ClosedBatch) -> List:
+        return self.engine.batcher.run(
+            self.engine.params, [r.padded for r in batch.requests]
+        )
+
+    def submit(
+        self,
+        seeds: Sequence[int],
+        *,
+        deadline_s: Optional[float] = None,
+        deadline: Optional[float] = None,
+        priority: int = 0,
+    ) -> Request:
+        """Admit one seed query; returns the request (``.future`` resolves
+        to its seed logits).  Raises ``AdmissionError`` on rejection."""
+        if deadline_s is not None and deadline is not None:
+            raise ValueError("pass deadline_s (relative) or deadline "
+                             "(absolute), not both")
+        t0 = self.clock.now()
+        padded = self.engine._prepare(seeds)
+        req = Request(
+            graph_key=self.graph_key,
+            seeds=tuple(int(s) for s in seeds),
+            deadline=(t0 + deadline_s if deadline_s is not None else deadline),
+            priority=priority,
+            bucket=padded.bucket,
+            padded=padded,
+            prep_s=self.clock.now() - t0,
+        )
+        self.queue.submit(req)
+        self.loop.notify()
+        return req
+
+    def cancel(self, request: Request) -> bool:
+        ok = self.queue.cancel(request)
+        if ok:
+            self.loop.notify()
+        return ok
+
+    # ------------------------------------------------------------------
+
+    def start(self) -> "ServeRuntime":
+        self.loop.start()
+        return self
+
+    def drain(self) -> int:
+        """Synchronous path: close + execute everything on this thread."""
+        if self.loop.running:
+            raise RuntimeError(
+                "drain() is for the non-threaded mode; with the worker "
+                "running, wait on the request futures instead")
+        return self.loop.drain()
+
+    def shutdown(self, timeout: Optional[float] = 5.0) -> None:
+        """Stop the worker, then cancel everything still queued.
+
+        A request the loop never closed must not leave its future pending
+        forever — a caller blocked on ``future.result()`` with no timeout
+        would hang past shutdown.  Cancelled requests raise
+        ``concurrent.futures.CancelledError`` at the waiter and are
+        counted under the ``cancelled`` metric.  Idempotent.
+        """
+        self.loop.shutdown(timeout)
+        with self.queue.lock:
+            leftovers = [
+                r for group in self.queue.groups().values() for r in group
+            ]
+            for r in leftovers:
+                self.queue.cancel(r)
+
+    def __enter__(self) -> "ServeRuntime":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -1,0 +1,154 @@
+"""SLO telemetry for the serving runtime.
+
+One :class:`MetricsRegistry` per runtime instance, fed by the queue
+(admission verdicts, depth), the scheduler (close reasons, sheds) and the
+worker loop (per-request wait/exec/e2e, SLO attainment).  Everything is
+lock-guarded — submissions land from caller threads while the worker loop
+records completions — and :meth:`MetricsRegistry.snapshot` renders the
+whole state as one JSON-able dict (the schema documented in the README),
+so dashboards and benchmarks consume the same object the tests assert on.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class Histogram:
+    """Latency histogram: raw samples + percentile summaries.
+
+    Samples are kept raw (seconds) rather than pre-bucketed — serving
+    runs are bounded by the request count, and exact percentiles keep the
+    virtual-clock tests assertion-exact.
+    """
+
+    def __init__(self) -> None:
+        self._values: List[float] = []
+
+    def observe(self, value_s: float) -> None:
+        self._values.append(float(value_s))
+
+    @property
+    def count(self) -> int:
+        return len(self._values)
+
+    def percentile(self, q: float) -> float:
+        if not self._values:
+            return 0.0
+        return float(np.percentile(np.asarray(self._values, np.float64), q))
+
+    def summary_ms(self) -> Dict[str, float]:
+        if not self._values:
+            return {"count": 0, "p50": 0.0, "p99": 0.0, "mean": 0.0,
+                    "max": 0.0}
+        v = np.asarray(self._values, np.float64) * 1e3
+        return {
+            "count": int(v.size),
+            "p50": float(np.percentile(v, 50)),
+            "p99": float(np.percentile(v, 99)),
+            "mean": float(v.mean()),
+            "max": float(v.max()),
+        }
+
+
+#: Counter names every registry starts with (snapshots always carry the
+#: full set, so consumers never need ``.get`` fallbacks).
+COUNTERS = (
+    "submitted",            # offered to admission control
+    "admitted",             # entered the queue
+    "rejected_queue_full",  # admission: bounded queue at capacity
+    "rejected_infeasible",  # admission: deadline < estimated exec time
+    "shed_expired",         # queued, then deadline became unmeetable
+    "cancelled",            # caller-cancelled while queued
+    "completed",            # future resolved with a result
+    "failed",               # future resolved with an exception
+    "batches_full",         # close reason: bucket filled
+    "batches_deadline",     # close reason: earliest deadline - est reached
+    "batches_flush",        # close reason: explicit flush/drain
+    "slo_met",              # completed with deadline, on time
+    "slo_missed",           # completed with deadline, late
+)
+
+
+class MetricsRegistry:
+    """Counters + gauges + latency histograms, snapshotted to JSON."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: Dict[str, int] = {name: 0 for name in COUNTERS}
+        self._gauges: Dict[str, float] = {"queue_depth": 0}
+        self._hists: Dict[str, Histogram] = {
+            "wait_s": Histogram(),   # admission -> batch close
+            "exec_s": Histogram(),   # batch close -> result ready
+            "e2e_s": Histogram(),    # admission -> result ready
+        }
+
+    # ------------------------------------------------------------------
+
+    def inc(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + n
+
+    def count(self, name: str) -> int:
+        with self._lock:
+            return self._counters.get(name, 0)
+
+    def set_gauge(self, name: str, value: float) -> None:
+        with self._lock:
+            self._gauges[name] = value
+
+    def observe(self, hist: str, value_s: float) -> None:
+        with self._lock:
+            self._hists.setdefault(hist, Histogram()).observe(value_s)
+
+    def histogram(self, name: str) -> Histogram:
+        with self._lock:
+            return self._hists.setdefault(name, Histogram())
+
+    # ------------------------------------------------------------------
+
+    @property
+    def shed_rate(self) -> float:
+        """Fraction of offered requests that never produced a result:
+        admission rejections plus queued-then-expired sheds."""
+        with self._lock:
+            c = self._counters
+            shed = (c["rejected_queue_full"] + c["rejected_infeasible"]
+                    + c["shed_expired"])
+            return shed / max(c["submitted"], 1)
+
+    @property
+    def slo_attainment(self) -> float:
+        """On-time fraction of completed deadline-carrying requests."""
+        with self._lock:
+            c = self._counters
+            judged = c["slo_met"] + c["slo_missed"]
+            return c["slo_met"] / max(judged, 1)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            hists = {k: h.summary_ms() for k, h in self._hists.items()}
+        shed = (counters["rejected_queue_full"]
+                + counters["rejected_infeasible"] + counters["shed_expired"])
+        judged = counters["slo_met"] + counters["slo_missed"]
+        return {
+            "counters": counters,
+            "gauges": gauges,
+            "latency_ms": hists,
+            "derived": {
+                "shed_rate": shed / max(counters["submitted"], 1),
+                "slo_attainment": counters["slo_met"] / max(judged, 1),
+            },
+        }
+
+    def write_json(self, path: str, indent: Optional[int] = 2) -> dict:
+        snap = self.snapshot()
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=indent)
+        return snap

@@ -1,0 +1,200 @@
+"""Deadline-aware batch closing over the bucketed request queue.
+
+The scheduler owns one decision: *when does a bucket's group of queued
+requests become a batch?*  Two triggers, both pure functions of the clock
+and the queue:
+
+* **full** — the group reaches ``max_batch`` (the micro-batcher's
+  coalescing width): close immediately, batching cannot improve further;
+* **deadline** — the group's most urgent request can wait no longer:
+  close at ``earliest_deadline - est_exec(bucket, padded_batch)``, the
+  latest instant at which the batch can still start and finish on time
+  (``est_exec`` from the same :class:`~repro.runtime.queue.BucketEstimator`
+  admission uses).  Best-effort requests never trigger this; an optional
+  ``max_wait_s`` bounds their sojourn instead.
+
+Within a closing batch requests are ordered by
+:meth:`~repro.runtime.queue.Request.order_key` — priority tiers first,
+earliest deadline next, arrival order last — and a group larger than
+``max_batch`` closes its most urgent ``max_batch`` slice, leaving the
+rest queued.  Requests whose deadline fully expired while queued (the
+backlog pushed ``now`` past it before any close fired) are shed at poll
+time with :class:`~repro.runtime.queue.DeadlineExceededError` instead of
+wasting a batch slot on a guaranteed SLO miss.
+
+``poll`` is deterministic: given the same queue state and the same clock
+reading it always closes the same batches in the same order (buckets in
+first-seen order).  All the virtual-clock tests drive it directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+from repro.runtime.clock import Clock
+from repro.runtime.metrics import MetricsRegistry
+from repro.runtime.queue import DeadlineExceededError, Request, RequestQueue
+
+
+@dataclasses.dataclass
+class ClosedBatch:
+    """One bucket's batch, closed and ready for execution."""
+
+    bucket: object
+    requests: List[Request]
+    closed_at: float
+    reason: str              # "full" | "deadline" | "flush"
+
+
+def _pad_batch(sizes: Sequence[int], n: int) -> int:
+    for b in sizes:
+        if b >= n:
+            return b
+    return sizes[-1]
+
+
+class BatchScheduler:
+    def __init__(
+        self,
+        queue: RequestQueue,
+        *,
+        max_batch: int,
+        batch_sizes: Optional[Sequence[int]] = None,
+        estimator=None,
+        clock: Optional[Clock] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        max_wait_s: Optional[float] = None,
+        close_margin_s: float = 0.0,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.queue = queue
+        self.max_batch = int(max_batch)
+        # The padded batch ladder the executables were warmed for: a group
+        # of n requests runs as a pad_batch(n)-wide executable, so the
+        # deadline trigger estimates at that width, not at n.
+        self.batch_sizes = tuple(batch_sizes) if batch_sizes else tuple(
+            sorted({min(2 ** i, max_batch)
+                    for i in range(max_batch.bit_length() + 1)})
+        )
+        self.estimator = estimator or queue.estimator
+        self.clock = clock or queue.clock
+        self.metrics = metrics or queue.metrics
+        self.max_wait_s = max_wait_s
+        # Safety slack subtracted from every deadline trigger: the worker
+        # wakes *at* the trigger plus scheduling jitter, so with a
+        # microscopic exec estimate a zero-margin close would land past
+        # the deadline and hard-expire the very request it was closing
+        # for.  Real-clock runtimes pass a few milliseconds; the virtual
+        # clock has no jitter, so tests keep the exact 0.0 default.
+        self.close_margin_s = float(close_margin_s)
+
+    # ------------------------------------------------------------------
+
+    def padded_width(self, n: int) -> int:
+        """The executable width a batch of ``n`` requests actually runs at
+        (the warmed power-of-two ladder) — also the key measured execution
+        times are recorded under, so estimates and observations meet."""
+        return _pad_batch(self.batch_sizes, n)
+
+    def _est(self, bucket, n: int) -> float:
+        if self.estimator is None:
+            return 0.0
+        return self.estimator.estimate(bucket, self.padded_width(n))
+
+    def close_time(self, bucket, group: Sequence[Request]) -> float:
+        """The instant this group's deadline trigger fires (inf = never)."""
+        if not group:
+            return math.inf
+        if len(group) >= self.max_batch:
+            return -math.inf
+        t = math.inf
+        deadlines = [r.deadline for r in group if r.deadline is not None]
+        if deadlines:
+            t = (min(deadlines) - self._est(bucket, len(group))
+                 - self.close_margin_s)
+        if self.max_wait_s is not None:
+            # Sojourn bound for *best-effort* requests only: a deadline
+            # carries its own close trigger, and capping it here would let
+            # a short max_wait preempt deadline-aware coalescing.
+            best_effort = [
+                r.arrival for r in group if r.deadline is None]
+            if best_effort:
+                t = min(t, min(best_effort) + self.max_wait_s)
+        return t
+
+    def next_close_time(self) -> Optional[float]:
+        """Earliest pending trigger across all groups (the worker loop's
+        wait horizon); None when the queue is empty."""
+        with self.queue.lock:
+            times = [
+                self.close_time(bucket, group)
+                for bucket, group in self.queue.groups().items()
+            ]
+        return min(times) if times else None
+
+    # ------------------------------------------------------------------
+
+    def poll(self, now: Optional[float] = None) -> List[ClosedBatch]:
+        """Shed the unmeetable, close every fired trigger; deterministic."""
+        now = self.clock.now() if now is None else now
+        closed: List[ClosedBatch] = []
+        with self.queue.lock:
+            # Snapshot: closing mutates the group dict under iteration.
+            for bucket, group in list(self.queue.groups().items()):
+                self._shed_expired(bucket, group, now)
+                while len(group) >= self.max_batch:
+                    batch = sorted(
+                        group, key=Request.order_key)[: self.max_batch]
+                    self.queue.remove(batch)
+                    self.metrics.inc("batches_full")
+                    closed.append(ClosedBatch(bucket, batch, now, "full"))
+                if group and now >= self.close_time(bucket, group):
+                    batch = sorted(group, key=Request.order_key)
+                    self.queue.remove(batch)
+                    self.metrics.inc("batches_deadline")
+                    closed.append(ClosedBatch(bucket, batch, now, "deadline"))
+        return closed
+
+    def flush(self, now: Optional[float] = None) -> List[ClosedBatch]:
+        """Close everything queued, in max_batch chunks per bucket."""
+        now = self.clock.now() if now is None else now
+        closed: List[ClosedBatch] = []
+        with self.queue.lock:
+            for bucket, group in list(self.queue.groups().items()):
+                ordered = sorted(group, key=Request.order_key)
+                self.queue.remove(ordered)
+                for lo in range(0, len(ordered), self.max_batch):
+                    chunk = ordered[lo: lo + self.max_batch]
+                    self.metrics.inc("batches_flush")
+                    closed.append(ClosedBatch(bucket, chunk, now, "flush"))
+        return closed
+
+    # ------------------------------------------------------------------
+
+    def _shed_expired(self, bucket, group: List[Request], now: float) -> None:
+        """Fail queued requests whose deadline has fully expired.
+
+        Expiry is strict (``now > deadline``), deliberately *looser* than
+        the close trigger: the close at ``deadline - est`` fires first, so
+        a poll landing marginally after that boundary still closes the
+        batch (a near-miss executes and is accounted as ``slo_missed``)
+        rather than shedding the most urgent request over scheduling
+        jitter.  Only a request the loop never managed to close — backlog
+        pushed ``now`` past its whole deadline — is shed, which under
+        overload is what frees the queue for requests that can still win.
+        """
+        doomed = [
+            r for r in group
+            if r.deadline is not None and now > r.deadline
+        ]
+        if not doomed:
+            return
+        self.queue.remove(doomed)
+        for r in doomed:
+            self.metrics.inc("shed_expired")
+            if not r.future.done():
+                r.future.set_exception(DeadlineExceededError(
+                    f"deadline {r.deadline:.6f} expired at {now:.6f}"))

@@ -49,6 +49,21 @@ def _round_up(x: int, q: int) -> int:
     return -(-x // q) * q
 
 
+def ladder_rungs(base: int, top: int, growth: float, quantum: int) -> List[int]:
+    """Node counts of a geometric ladder: ``base`` up to ``top`` by factor
+    ``growth``, every rung rounded up to ``quantum`` and strictly
+    increasing (a fractional factor whose step rounds away still advances
+    by one quantum, so the ladder always terminates at ``top``)."""
+    if growth <= 1:
+        raise ValueError(f"ladder growth must be > 1, got {growth}")
+    rungs = [min(base, top)]
+    while rungs[-1] < top:
+        nxt = max(_round_up(int(rungs[-1] * growth), quantum),
+                  rungs[-1] + quantum)
+        rungs.append(min(nxt, top))
+    return rungs
+
+
 @dataclasses.dataclass(frozen=True)
 class BucketLadder:
     entries: Tuple[Bucket, ...]   # ascending
@@ -59,7 +74,7 @@ class BucketLadder:
         full_graph: GCNGraph,
         cfg: GCNConfig,
         base_nodes: int = 256,
-        growth: int = 4,
+        growth=4,
     ) -> "BucketLadder":
         """Geometric ladder capped by the full graph's operand.
 
@@ -69,23 +84,33 @@ class BucketLadder:
         carried on the ladder so per-bucket autoplanning can estimate a
         rung's nonzero count before any request has landed in it.  The top
         entry covers the whole graph, so escalation always terminates.
+
+        ``growth`` may be any factor > 1 (each rung rounds up to
+        ``block_k`` and always advances by at least one block, so a
+        fractional factor still terminates), or ``"auto"`` to let the
+        cost model pick a factor
+        (:func:`repro.plan.autoplan.choose_ladder_growth`: padded-work
+        vs warmup-compile tradeoff scored on this graph's statistics).
         """
         from repro.plan import cost
 
         stats = cost.graph_stats_from_ell(full_graph.pre.ell)
         n_nodes = full_graph.n_nodes
-        rows_factor = stats.rows_per_node
         top_nodes = _round_up(n_nodes, cfg.block_k)
-        entries: List[Bucket] = []
-        nodes = min(_round_up(base_nodes, cfg.block_k), top_nodes)
-        while True:
-            rows = _round_up(nodes * rows_factor, cfg.block_rows)
-            entries.append(Bucket(nodes=nodes, rows=rows))
-            if nodes >= top_nodes:
-                break
-            nodes = min(nodes * growth, top_nodes)
+        base = min(_round_up(base_nodes, cfg.block_k), top_nodes)
+        if growth == "auto":
+            from repro.plan.autoplan import choose_ladder_growth
+
+            growth = choose_ladder_growth(
+                stats, cfg, base_nodes=base, top_nodes=top_nodes
+            )
+        entries = tuple(
+            Bucket(nodes=n, rows=_round_up(n * stats.rows_per_node,
+                                           cfg.block_rows))
+            for n in ladder_rungs(base, top_nodes, growth, cfg.block_k)
+        )
         return BucketLadder(
-            entries=tuple(entries), mean_row_nnz=stats.mean_row_nnz
+            entries=entries, mean_row_nnz=stats.mean_row_nnz
         )
 
     def bucket_for(self, n_sub_nodes: int, n_ell_rows: int) -> Bucket:

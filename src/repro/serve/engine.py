@@ -88,6 +88,7 @@ class ServeEngine:
         interpret: Optional[bool] = None,
         mesh=None,
         autoplan: bool = False,
+        ladder_growth=None,
     ):
         self.cfg = cfg
         self.adj_norm = adj_norm
@@ -107,10 +108,18 @@ class ServeEngine:
             seed=sampler_seed,
             registry=self.registry,
         )
+        # With autoplanning on, the ladder's growth factor is a plan
+        # decision too (cost-model search over candidate factors) unless
+        # the caller pinned one; the historical geometric default holds
+        # otherwise.
+        if ladder_growth is None:
+            ladder_growth = "auto" if autoplan else 4
         self.batcher = MicroBatcher(
             cfg,
             ladder
-            or BucketLadder.for_graph(self.graph, cfg, base_nodes=base_bucket_nodes),
+            or BucketLadder.for_graph(self.graph, cfg,
+                                      base_nodes=base_bucket_nodes,
+                                      growth=ladder_growth),
             max_batch=max_batch,
             max_seeds=max_seeds,
             interpret=interpret,
@@ -120,6 +129,7 @@ class ServeEngine:
         self.timings: Dict[str, List[float]] = {}
         self.seeds_served: Dict[str, int] = {}
         self.wall: Dict[str, float] = {}
+        self._graph_key = None
 
     # ------------------------------------------------------------------
 
@@ -220,38 +230,47 @@ class ServeEngine:
     def query_batch(self, requests: Sequence[Sequence[int]]) -> List[np.ndarray]:
         """Answer many seed queries, coalescing per shape bucket.
 
+        A thin synchronous facade over the ``repro.runtime`` machinery:
+        every query is submitted (best effort, no deadline) into the
+        runtime's queue and the scheduler is drained on the calling
+        thread.  With equal priorities and no deadlines the scheduler's
+        EDF order degrades to arrival order and its full/flush chunking
+        reproduces the historical eager grouping exactly, so results are
+        bit-identical to the pre-runtime implementation.
+
         Per-request latency spans its own extraction plus the coalesced
         forward it rode in (requests in one chunk share that cost), so the
         latency sum over-counts shared time; throughput uses the actual
         wall clock of the whole call.
         """
         t_call = time.perf_counter()
-        prepared: List[tuple] = []
-        for seeds in requests:
-            t0 = time.perf_counter()
-            req = self._prepare(seeds)
-            prepared.append((req, time.perf_counter() - t0))
-
-        groups: Dict[object, List[int]] = {}
-        for i, (req, _) in enumerate(prepared):
-            groups.setdefault(req.bucket, []).append(i)
-
-        outputs: List[Optional[np.ndarray]] = [None] * len(prepared)
-        lats = [0.0] * len(prepared)
-        for bucket, idxs in groups.items():
-            for lo in range(0, len(idxs), self.batcher.max_batch):
-                chunk = idxs[lo : lo + self.batcher.max_batch]
-                t0 = time.perf_counter()
-                outs = self.batcher.run(
-                    self.params, [prepared[i][0] for i in chunk]
-                )
-                dt = time.perf_counter() - t0
-                for i, out in zip(chunk, outs):
-                    outputs[i] = out
-                    lats[i] = prepared[i][1] + dt
+        rt = self._sync_runtime()
+        reqs = [rt.submit(seeds) for seeds in requests]
+        rt.drain()
+        outputs = [r.future.result() for r in reqs]
+        lats = [r.prep_s + (r.exec_s or 0.0) for r in reqs]
         n_seeds = sum(len(o) for o in outputs)
         self._record("batch", lats, n_seeds, wall=time.perf_counter() - t_call)
         return outputs
+
+    def runtime(self, **kw) -> "ServeRuntime":
+        """A fresh async runtime over this (ideally warmed) engine; see
+        :class:`repro.runtime.ServeRuntime` for the knobs."""
+        from repro.runtime import ServeRuntime
+
+        return ServeRuntime(self, **kw)
+
+    def _sync_runtime(self) -> "ServeRuntime":
+        """The facade's runtime: unbounded (a synchronous batch must never
+        shed), never threaded (drained inline per call), and built fresh
+        per call so its raw-sample metrics registry stays bounded by one
+        batch instead of growing for the engine's lifetime.  The graph
+        content hash is computed once per engine and reused."""
+        if self._graph_key is None:
+            from repro.serve.registry import graph_key
+
+            self._graph_key = graph_key(self.adj_norm, self.cfg)
+        return self.runtime(capacity=None, graph_key=self._graph_key)
 
     # ------------------------------------------------------------------
 

@@ -6,10 +6,19 @@ Production behaviours, exercised by tests with injected failures:
 * automatic restart: on a step failure (device loss, preemption — simulated
   via an injectable ``failure_hook``) the loop restores the latest complete
   checkpoint and resumes, bounded by ``max_restarts``;
-* straggler mitigation: per-step wall times feed an EWMA monitor; steps
-  slower than ``straggler_factor`` x the EWMA are logged and counted (on a
-  real multi-host deployment the monitor's verdict gates the backup-replica
-  path in repro.dist.straggler);
+* straggler mitigation, two tiers:
+
+  - per-*step* wall times feed an EWMA monitor; steps slower than
+    ``straggler_factor`` x the EWMA are logged and counted;
+  - with ``TrainerConfig.n_replicas > 1``, per-*replica* step times
+    (reported by the step itself under the ``replica_step_times`` metrics
+    key) feed a :class:`repro.dist.StragglerMonitor`, and the monitor's
+    ``alive()`` mask is handed to the step function as a third argument —
+    the step averages gradients with
+    ``repro.dist.collectives.masked_psum_mean`` over that mask, so a
+    dropped replica stops contributing to (and stops stalling) the
+    surviving replicas' average instead of merely being counted;
+
 * NaN/inf guard: non-finite loss aborts the step and restores, instead of
   poisoning the parameters.
 """
@@ -23,10 +32,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.dist.straggler import StragglerMonitor
 from repro.train import checkpoint as ckpt
 
 PyTree = Any
-StepFn = Callable[[PyTree, Any], Tuple[PyTree, Dict[str, Any]]]
+StepFn = Callable[..., Tuple[PyTree, Dict[str, Any]]]
 
 
 @dataclasses.dataclass
@@ -39,6 +49,13 @@ class TrainerConfig:
     max_restarts: int = 5
     straggler_factor: float = 3.0
     log_every: int = 10
+    # Replica-level straggler dropping: with n_replicas > 1 the loop runs a
+    # StragglerMonitor over the per-replica step times the step reports and
+    # passes its alive() mask into step_fn (masked_psum_mean averaging).
+    n_replicas: int = 1
+    straggler_warn_factor: float = 2.0
+    straggler_drop_factor: float = 4.0
+    straggler_patience: int = 2
 
 
 @dataclasses.dataclass
@@ -48,6 +65,7 @@ class TrainerReport:
     stragglers: int
     losses: List[float]
     step_times: List[float]
+    dropped_replicas: List[int] = dataclasses.field(default_factory=list)
 
 
 class StepFailure(RuntimeError):
@@ -61,12 +79,22 @@ def run(
     batch_iter,
     failure_hook: Optional[Callable[[int], None]] = None,
     log: Callable[[str], None] = print,
+    straggler_monitor: Optional[StragglerMonitor] = None,
 ) -> Tuple[PyTree, TrainerReport]:
     """Run the loop; ``state`` is any pytree holding params + opt state.
 
     ``step_fn(state, batch) -> (state, metrics)`` must be pure (typically a
     jitted closure).  ``failure_hook(step)`` may raise StepFailure to
     simulate a node loss at that step.
+
+    With replica monitoring on (``cfg.n_replicas > 1`` or an explicit
+    ``straggler_monitor``) the contract widens:
+    ``step_fn(state, batch, alive) -> (state, metrics)`` receives the
+    monitor's per-replica ``alive`` float mask (shape ``(n_replicas,)``)
+    and is expected to average gradients with
+    ``masked_psum_mean(grads, axis, alive[replica])``; reporting
+    per-replica wall times under ``metrics["replica_step_times"]`` is
+    what feeds the monitor's warn/drop verdicts.
     """
     start_step = 0
     existing = ckpt.latest_step(cfg.ckpt_dir)
@@ -79,6 +107,15 @@ def run(
     losses: List[float] = []
     times: List[float] = []
     ewma: Optional[float] = None
+    monitor = straggler_monitor
+    if monitor is None and cfg.n_replicas > 1:
+        monitor = StragglerMonitor(
+            cfg.n_replicas,
+            warn_factor=cfg.straggler_warn_factor,
+            drop_factor=cfg.straggler_drop_factor,
+            patience=cfg.straggler_patience,
+        )
+    dropped: List[int] = []
 
     step = start_step
     while step < cfg.total_steps:
@@ -87,7 +124,10 @@ def run(
         try:
             if failure_hook is not None:
                 failure_hook(step)
-            new_state, metrics = step_fn(state, batch)
+            if monitor is not None:
+                new_state, metrics = step_fn(state, batch, monitor.alive())
+            else:
+                new_state, metrics = step_fn(state, batch)
             loss = float(metrics.get("loss", np.nan))
             if not np.isfinite(loss):
                 raise StepFailure(f"non-finite loss at step {step}: {loss}")
@@ -119,6 +159,22 @@ def run(
                 log(f"[trainer] straggler step {step}: {dt:.3f}s vs EWMA {ewma:.3f}s")
             ewma = 0.9 * ewma + 0.1 * dt
 
+        # --- replica-level monitor (per-replica times -> alive mask) ---
+        if monitor is not None and "replica_step_times" in metrics:
+            for v in monitor.observe(
+                np.asarray(metrics["replica_step_times"], np.float64)
+            ):
+                if v.action == "drop":
+                    dropped.append(v.replica)
+                    stragglers += 1
+                    log(f"[trainer] replica {v.replica} dropped at step "
+                        f"{step} ({v.ratio:.1f}x median); gradient "
+                        f"averaging renormalizes over the survivors")
+                else:
+                    stragglers += 1
+                    log(f"[trainer] replica {v.replica} straggling at step "
+                        f"{step} ({v.ratio:.1f}x median)")
+
         step += 1
         if step % cfg.ckpt_every == 0 or step == cfg.total_steps:
             ckpt.save_async(
@@ -134,4 +190,5 @@ def run(
         stragglers=stragglers,
         losses=losses,
         step_times=times,
+        dropped_replicas=dropped,
     )

@@ -1,0 +1,541 @@
+"""Tests for repro.runtime: the async deadline-aware serving runtime.
+
+Scheduler behavior is asserted *exactly* under the virtual clock — batch
+close times, EDF ordering, priority tiers, admission rejections, shed
+accounting — with no sleeps and no wall-clock reads in any decision.
+Engine-level tests prove the two acceptance invariants: the synchronous
+``query_batch`` facade reproduces the historical eager grouping
+bit-for-bit, and a warmed engine serves mixed async traffic with zero
+new compilations.
+"""
+
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    BatchScheduler,
+    BucketEstimator,
+    DeadlineExceededError,
+    DeadlineInfeasibleError,
+    FixedEstimator,
+    MetricsRegistry,
+    QueueFullError,
+    Request,
+    RequestQueue,
+    RuntimeLoop,
+    VirtualClock,
+)
+from repro.serve.batcher import Bucket
+
+B64 = Bucket(nodes=64, rows=128)
+B256 = Bucket(nodes=256, rows=512)
+
+
+def _req(bucket=B64, deadline=None, priority=0, seeds=(0,)):
+    return Request(graph_key="g", seeds=tuple(seeds), deadline=deadline,
+                   priority=priority, bucket=bucket, padded=object())
+
+
+def _rig(*, capacity=8, max_batch=4, est=0.25, max_wait=None):
+    clock = VirtualClock()
+    queue = RequestQueue(capacity=capacity, clock=clock,
+                         estimator=FixedEstimator(est))
+    sched = BatchScheduler(queue, max_batch=max_batch, max_wait_s=max_wait)
+    return clock, queue, sched
+
+
+# ---------------------------------------------------------------------------
+# clock
+# ---------------------------------------------------------------------------
+
+
+def test_virtual_clock_is_monotone():
+    clock = VirtualClock(start=10.0)
+    assert clock.now() == 10.0
+    assert clock.advance(2.5) == 12.5
+    with pytest.raises(ValueError):
+        clock.advance(-1.0)
+    with pytest.raises(ValueError):
+        clock.set_time(5.0)
+    assert clock.set_time(20.0) == 20.0
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rejects_on_queue_full():
+    clock, queue, _ = _rig(capacity=2)
+    queue.submit(_req())
+    queue.submit(_req())
+    victim = _req()
+    with pytest.raises(QueueFullError):
+        queue.submit(victim)
+    # the future carries the same verdict as the submit site
+    with pytest.raises(QueueFullError):
+        victim.future.result(timeout=0)
+    m = queue.metrics
+    assert m.count("submitted") == 3 and m.count("admitted") == 2
+    assert m.count("rejected_queue_full") == 1
+    assert queue.depth == 2
+
+
+def test_admission_rejects_infeasible_deadline():
+    clock, queue, _ = _rig(est=1.0)
+    # 0.5s of slack against a 1.0s estimate: cannot finish even alone
+    victim = _req(deadline=clock.now() + 0.5)
+    with pytest.raises(DeadlineInfeasibleError):
+        queue.submit(victim)
+    assert queue.metrics.count("rejected_infeasible") == 1
+    assert queue.depth == 0
+    # exactly-feasible is admitted (>=, not >)
+    queue.submit(_req(deadline=clock.now() + 1.0))
+    assert queue.depth == 1
+
+
+def test_cancellation_removes_from_queue():
+    clock, queue, sched = _rig()
+    keep, drop = _req(), _req()
+    queue.submit(keep)
+    queue.submit(drop)
+    assert queue.cancel(drop) and drop.future.cancelled()
+    assert queue.depth == 1
+    assert queue.metrics.count("cancelled") == 1
+    # cancelling twice (or after removal) is a no-op
+    assert not queue.cancel(drop)
+    [batch] = sched.flush()
+    assert batch.requests == [keep]
+
+
+# ---------------------------------------------------------------------------
+# batch closing: exact times, EDF, priorities
+# ---------------------------------------------------------------------------
+
+
+def test_full_bucket_closes_immediately():
+    clock, queue, sched = _rig(max_batch=2)
+    r1, r2 = _req(), _req()
+    queue.submit(r1)
+    assert sched.poll() == []          # half-full, no deadline: waits
+    queue.submit(r2)
+    [batch] = sched.poll()
+    assert batch.reason == "full" and batch.closed_at == clock.now()
+    assert batch.requests == [r1, r2]
+    assert queue.depth == 0
+    assert queue.metrics.count("batches_full") == 1
+
+
+def test_deadline_close_time_is_exact():
+    clock, queue, sched = _rig(est=0.25)
+    queue.submit(_req(deadline=10.0))
+    # close fires at deadline - est(padded batch of 1) exactly
+    assert sched.next_close_time() == pytest.approx(9.75)
+    clock.set_time(9.749999)
+    assert sched.poll() == []
+    clock.set_time(9.75)
+    [batch] = sched.poll()
+    assert batch.reason == "deadline" and batch.closed_at == 9.75
+    assert queue.metrics.count("batches_deadline") == 1
+
+
+def test_deadline_trigger_estimates_at_padded_batch_width():
+    clock, queue, sched = _rig(max_batch=4, est=0.25)
+
+    class PerBatchEst:
+        def estimate(self, bucket, batch=1):
+            return 0.1 * batch          # wider batches take longer
+
+        def observe(self, *a):
+            pass
+
+    sched.estimator = PerBatchEst()
+    queue.submit(_req(deadline=10.0))
+    queue.submit(_req(deadline=12.0))
+    queue.submit(_req(deadline=11.0))
+    # 3 requests pad to the 4-wide executable: close at 10.0 - 0.4
+    assert sched.next_close_time() == pytest.approx(9.6)
+
+
+def test_edf_ordering_within_batch():
+    clock, queue, sched = _rig(max_batch=8)
+    late = _req(deadline=5.0)
+    early = _req(deadline=3.0)
+    mid = _req(deadline=4.0)
+    best_effort = _req()               # no deadline: sorts last
+    for r in (late, best_effort, early, mid):
+        queue.submit(r)
+    clock.set_time(2.74)               # 3.0 - est(0.25) - tiny
+    assert sched.poll() == []
+    clock.set_time(2.75)
+    [batch] = sched.poll()
+    assert batch.requests == [early, mid, late, best_effort]
+
+
+def test_priority_tiers_dominate_deadlines():
+    clock, queue, sched = _rig(max_batch=8)
+    urgent_low = _req(deadline=2.0, priority=0)
+    relaxed_high = _req(deadline=9.0, priority=1)
+    queue.submit(urgent_low)
+    queue.submit(relaxed_high)
+    [batch] = sched.flush()
+    assert batch.requests == [relaxed_high, urgent_low]
+
+
+def test_oversized_group_closes_most_urgent_slice():
+    clock, queue, sched = _rig(max_batch=2, capacity=8)
+    reqs = [_req(deadline=float(10 - i)) for i in range(3)]  # 10, 9, 8
+    # submitting the 2nd fills a batch: poll closes {deadline 9, 10}? No —
+    # EDF takes the two most urgent of the *current* group.
+    for r in reqs[:2]:
+        queue.submit(r)
+    [b1] = sched.poll()
+    assert [r.deadline for r in b1.requests] == [9.0, 10.0]
+    queue.submit(reqs[2])
+    assert queue.depth == 1
+
+
+def test_poll_exactly_at_deadline_closes_rather_than_sheds():
+    clock, queue, sched = _rig(est=0.25)
+    r = _req(deadline=1.0)
+    queue.submit(r)
+    clock.set_time(1.0)                # past the 0.75 trigger, not expired
+    [batch] = sched.poll()
+    assert batch.reason == "deadline" and batch.requests == [r]
+    assert queue.metrics.count("shed_expired") == 0
+
+
+def test_expired_request_is_shed_with_accounting():
+    # No poll happens until the victim's whole deadline has passed (a
+    # backlogged worker): it is shed, the feasible request stays queued.
+    clock, queue, sched = _rig(est=0.25)
+    victim = _req(deadline=1.0)
+    queue.submit(victim)
+    survivor = _req(deadline=50.0)
+    queue.submit(survivor)
+    clock.set_time(1.01)
+    assert sched.poll() == []
+    assert queue.depth == 1
+    with pytest.raises(DeadlineExceededError):
+        victim.future.result(timeout=0)
+    m = queue.metrics
+    assert m.count("shed_expired") == 1
+    assert m.shed_rate == pytest.approx(1 / 2)
+
+
+def test_max_wait_bounds_best_effort_sojourn():
+    clock, queue, sched = _rig(max_wait=0.5)
+    r = _req()                         # no deadline
+    queue.submit(r)
+    assert sched.next_close_time() == pytest.approx(0.5)
+    clock.set_time(0.5)
+    [batch] = sched.poll()
+    assert batch.requests == [r] and batch.reason == "deadline"
+
+
+def test_max_wait_never_preempts_deadline_aware_closing():
+    """max_wait bounds *best-effort* sojourn only: a deadline-carrying
+    group keeps its deadline - est trigger, so coalescing under load is
+    not cut short by the progress bound."""
+    clock, queue, sched = _rig(max_wait=0.5, est=0.25)
+    queue.submit(_req(deadline=10.0))
+    assert sched.next_close_time() == pytest.approx(9.75)  # not 0.5
+    # a best-effort arrival in the same bucket restores the progress bound
+    queue.submit(_req())
+    assert sched.next_close_time() == pytest.approx(0.5)
+
+
+def test_flush_chunks_in_arrival_order():
+    clock, queue, sched = _rig(max_batch=2, capacity=8)
+    a = [_req(bucket=B64) for _ in range(3)]
+    b = [_req(bucket=B256) for _ in range(1)]
+    for r in (a[0], b[0], a[1], a[2]):
+        queue.submit(r)
+    batches = sched.flush()
+    assert [(x.bucket, [r.seq for r in x.requests]) for x in batches] == [
+        (B64, [a[0].seq, a[1].seq]),
+        (B64, [a[2].seq]),
+        (B256, [b[0].seq]),
+    ]
+    assert all(x.reason == "flush" for x in batches)
+
+
+# ---------------------------------------------------------------------------
+# worker loop: futures, exception isolation, idempotent shutdown
+# ---------------------------------------------------------------------------
+
+
+def test_loop_resolves_futures_and_records_metrics():
+    clock, queue, sched = _rig(max_batch=2)
+    loop = RuntimeLoop(sched, lambda batch: [
+        f"out-{r.seq}" for r in batch.requests])
+    r1, r2 = _req(deadline=10.0), _req(deadline=10.0)
+    queue.submit(r1)
+    clock.advance(1.0)
+    queue.submit(r2)
+    assert loop.step() == 1            # full trigger
+    assert r1.future.result(timeout=0) == f"out-{r1.seq}"
+    assert r2.future.result(timeout=0) == f"out-{r2.seq}"
+    # exact wait accounting under the virtual clock
+    assert r1.wait_s == pytest.approx(1.0)
+    assert r2.wait_s == pytest.approx(0.0)
+    m = queue.metrics
+    assert m.count("completed") == 2
+    assert m.count("slo_met") == 2 and m.count("slo_missed") == 0
+    assert m.histogram("wait_s").count == 2
+
+
+def test_failing_batch_fails_only_its_own_requests():
+    clock, queue, sched = _rig(max_batch=2, capacity=8)
+    boom = RuntimeError("kernel exploded")
+
+    def runner(batch):
+        if batch.bucket == B64:
+            raise boom
+        return [r.seq for r in batch.requests]
+
+    loop = RuntimeLoop(sched, runner)
+    bad = [_req(bucket=B64), _req(bucket=B64)]
+    good = [_req(bucket=B256), _req(bucket=B256)]
+    for r in (*bad, *good):
+        queue.submit(r)
+    assert loop.step() == 2            # both batches executed, one failed
+    for r in bad:
+        assert r.future.exception(timeout=0) is boom
+    for r in good:
+        assert r.future.result(timeout=0) == r.seq
+    m = queue.metrics
+    assert m.count("failed") == 2 and m.count("completed") == 2
+    # the loop is not wedged: later batches still run
+    more = [_req(bucket=B256), _req(bucket=B256)]
+    for r in more:
+        queue.submit(r)
+    assert loop.step() == 1
+    assert more[0].future.result(timeout=0) == more[0].seq
+
+
+def test_shutdown_is_idempotent_and_survives_crashed_batches():
+    clock, queue, sched = _rig(max_batch=1)
+
+    def runner(batch):
+        raise ValueError("always broken")
+
+    loop = RuntimeLoop(sched, runner)
+    loop.start()
+    assert loop.running
+    r = _req()
+    queue.submit(r)
+    loop.notify()
+    with pytest.raises(ValueError, match="always broken"):
+        r.future.result(timeout=5.0)
+    loop.shutdown()
+    assert not loop.running
+    loop.shutdown()                    # second call: no-op, no raise
+    loop.shutdown(timeout=0.0)
+
+
+# ---------------------------------------------------------------------------
+# estimator + metrics
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_estimator_deterministic_and_learns():
+    from repro.models.gcn import GCNConfig
+    from repro.serve.batcher import BucketLadder
+
+    cfg = GCNConfig(in_dim=32, hidden_dim=8, out_dim=5)
+    ladder = BucketLadder(entries=(B64, B256), mean_row_nnz=3.0)
+    est = BucketEstimator(cfg, ladder)
+    a = est.estimate(B64, 1)
+    assert a > 0 and est.estimate(B64, 1) == a         # pure + memoized
+    assert est.estimate(B256, 4) > est.estimate(B64, 1)  # bigger is slower
+    est.observe(B64, 1, 0.5)
+    assert est.estimate(B64, 1) == pytest.approx(0.5)  # measured wins
+    est.observe(B64, 1, 1.0)                           # EWMA folds in
+    assert 0.5 < est.estimate(B64, 1) < 1.0
+    assert est.estimate(B64, 2) != est.estimate(B64, 1)
+
+
+def test_metrics_snapshot_schema_and_json(tmp_path):
+    m = MetricsRegistry()
+    m.inc("submitted", 4)
+    m.inc("admitted", 3)
+    m.inc("rejected_queue_full")
+    m.observe("e2e_s", 0.010)
+    m.observe("e2e_s", 0.030)
+    m.inc("slo_met")
+    snap = m.write_json(str(tmp_path / "metrics.json"))
+    import json
+
+    with open(tmp_path / "metrics.json") as f:
+        assert json.load(f) == snap
+    assert snap["counters"]["submitted"] == 4
+    assert set(snap) == {"counters", "gauges", "latency_ms", "derived"}
+    assert snap["latency_ms"]["e2e_s"]["count"] == 2
+    assert snap["latency_ms"]["e2e_s"]["p50"] == pytest.approx(20.0)
+    assert snap["derived"]["shed_rate"] == pytest.approx(1 / 4)
+    assert snap["derived"]["slo_attainment"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# engine-level acceptance: facade identity + zero recompiles under async load
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE", str(tmp_path / "cache"))
+
+
+@pytest.fixture(scope="module")
+def toy_engine_parts():
+    from repro.graphs.datasets import (
+        DatasetSpec,
+        gcn_normalize,
+        synthesize_adjacency,
+    )
+
+    spec = DatasetSpec("toy", nodes=400, edges=1_600, feature_dim=32,
+                       classes=5)
+    adj_norm = gcn_normalize(synthesize_adjacency(spec, seed=7))
+    rng = np.random.default_rng(7)
+    feats = rng.standard_normal(
+        (spec.nodes, spec.feature_dim)).astype(np.float32)
+    return spec, adj_norm, feats
+
+
+def _toy_engine(toy_engine_parts, **kw):
+    from repro.models.gcn import GCNConfig
+    from repro.serve import ServeEngine
+
+    spec, adj_norm, feats = toy_engine_parts
+    cfg = GCNConfig(in_dim=spec.feature_dim, hidden_dim=8,
+                    out_dim=spec.classes)
+    base = dict(fanout=4, max_seeds=4, max_batch=4, base_bucket_nodes=64)
+    base.update(kw)
+    return ServeEngine(adj_norm, feats, cfg, **base)
+
+
+def test_query_batch_facade_is_bitwise_identical(toy_engine_parts):
+    """The runtime-backed facade must reproduce the historical eager
+    grouping exactly: same bucket groups, same max_batch chunks, same
+    arrival order, and therefore bit-identical outputs."""
+    engine = _toy_engine(toy_engine_parts)
+    rng = np.random.default_rng(5)
+    requests = [
+        rng.choice(400, size=int(rng.integers(1, 5)), replace=False)
+        for _ in range(13)
+    ]
+    got = engine.query_batch(requests)
+
+    # The pre-runtime implementation, replicated verbatim as the oracle.
+    prepared = [engine._prepare(seeds) for seeds in requests]
+    groups = {}
+    for i, req in enumerate(prepared):
+        groups.setdefault(req.bucket, []).append(i)
+    want = [None] * len(prepared)
+    for bucket, idxs in groups.items():
+        for lo in range(0, len(idxs), engine.batcher.max_batch):
+            chunk = idxs[lo: lo + engine.batcher.max_batch]
+            outs = engine.batcher.run(
+                engine.params, [prepared[i] for i in chunk])
+            for i, out in zip(chunk, outs):
+                want[i] = out
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_async_runtime_zero_recompiles_mixed_sizes(toy_engine_parts):
+    """After warmup, async traffic across mixed request sizes — closed by
+    full, deadline and flush triggers alike — builds zero executables."""
+    engine = _toy_engine(toy_engine_parts)
+    built = engine.warmup()
+    assert built > 0
+
+    rt = engine.runtime(capacity=64, clock=VirtualClock(start=100.0))
+    rng = np.random.default_rng(11)
+    reqs = []
+    for i in range(24):
+        seeds = rng.choice(400, size=int(rng.integers(1, 5)), replace=False)
+        reqs.append(rt.submit(seeds, deadline_s=float(1 + (i % 3))))
+    # drive the loop inline: step at each trigger until everything resolves
+    for _ in range(64):
+        rt.loop.step()
+        nxt = rt.scheduler.next_close_time()
+        if nxt is None:
+            break
+        if nxt > rt.clock.now():
+            rt.clock.set_time(nxt)
+    rt.loop.drain()
+    outs = [r.future.result(timeout=0) for r in reqs]
+    assert engine.compile_count == built, (
+        f"{engine.compile_count - built} post-warmup compilations")
+    # spot-check correctness against the single-query path
+    for r, out in zip(reqs[:4], outs[:4]):
+        np.testing.assert_allclose(out, engine.query(list(r.seeds)),
+                                   rtol=1e-4, atol=1e-4)
+    m = rt.metrics
+    assert m.count("completed") == 24
+    assert m.count("batches_full") + m.count("batches_deadline") \
+        + m.count("batches_flush") >= 1
+
+
+def test_threaded_runtime_end_to_end(toy_engine_parts):
+    """Real clock + worker thread: submit, wait on futures, shutdown."""
+    engine = _toy_engine(toy_engine_parts)
+    engine.warmup()
+    rng = np.random.default_rng(3)
+    # deadline-carrying requests close at their deadline-aware trigger
+    # (~1 s here); the best-effort request closes at the default 50 ms
+    # max_wait despite never filling a bucket — nothing waits out the
+    # worker or the suite.
+    with engine.runtime(capacity=32) as rt:
+        reqs = [
+            rt.submit(rng.choice(400, size=2, replace=False), deadline_s=1.0)
+            for _ in range(6)
+        ]
+        best_effort = rt.submit(rng.choice(400, size=2, replace=False))
+        outs = [r.future.result(timeout=30.0) for r in reqs]
+        assert best_effort.future.result(timeout=30.0).shape == (2, 5)
+    assert all(o.shape == (2, 5) for o in outs)
+    assert rt.metrics.count("completed") == 7
+    assert rt.metrics.slo_attainment == 1.0
+    rt.shutdown()                      # idempotent after __exit__
+
+
+def test_shutdown_cancels_still_queued_requests(toy_engine_parts):
+    """A future the loop never resolved must not outlive the runtime: a
+    waiter blocked on it without a timeout would hang forever."""
+    from concurrent.futures import CancelledError
+
+    engine = _toy_engine(toy_engine_parts)
+    engine.warmup()
+    rt = engine.runtime(capacity=8)    # loop never started: nothing closes
+    req = rt.submit([1, 2], deadline_s=60.0)
+    rt.shutdown()
+    assert req.future.cancelled()
+    with pytest.raises(CancelledError):
+        req.future.result(timeout=0)
+    assert rt.metrics.count("cancelled") == 1
+    assert rt.queue.depth == 0
+    rt.shutdown()                      # still idempotent
+
+
+def test_bench_queue_smoke(monkeypatch, capsys, tmp_path):
+    import benchmarks.bench_queue as bench_queue
+
+    monkeypatch.setattr(bench_queue, "BENCH_DIR", str(tmp_path))
+    monkeypatch.setattr(bench_queue, "SMOKE_QPS", (200.0, 400.0, 800.0))
+    payload = bench_queue.run(n_requests=6, hidden=8, deadline_ms=300.0)
+    out = capsys.readouterr().out
+    assert "goodput_rps,slo_attainment" in out
+    assert len(payload["records"]) == 3
+    rec = payload["records"][0]
+    for key in ("offered_qps", "p50_ms", "p99_ms", "goodput_rps",
+                "shed_rate", "compiles_post_warmup"):
+        assert key in rec
+    assert rec["compiles_post_warmup"] == 0
+    import json, os
+
+    with open(os.path.join(str(tmp_path), "queue_async.json")) as f:
+        assert json.load(f)["benchmark"] == "queue_async"

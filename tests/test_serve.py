@@ -71,6 +71,49 @@ def test_registry_cache_hit_skips_preprocessing(toy_graph, tmp_path):
     np.testing.assert_array_equal(g3.inv, g1.inv)
 
 
+def test_registry_lru_eviction_and_disk_refetch(toy_graph, tmp_path):
+    """mem_capacity bounds the LRU; an evicted persisted artifact comes
+    back from disk (no rebuild), an evicted memory-only one rebuilds."""
+    adj_norm, _ = toy_graph
+    cfgs = [_cfg(tau=t) for t in (3, 4, 5)]   # three distinct content keys
+    reg = ArtifactRegistry(cache_dir=str(tmp_path), mem_capacity=2)
+    graphs = [reg.get_or_build(adj_norm, c) for c in cfgs]
+    assert reg.stats.builds == 3
+    # capacity 2: building cfg[2] evicted cfg[0] (the LRU entry)
+    assert len(reg._graphs) == 2
+    assert graph_key(adj_norm, cfgs[0]) not in reg._graphs
+    g0 = reg.get_or_build(adj_norm, cfgs[0])  # re-fetch after eviction
+    assert reg.stats.builds == 3 and reg.stats.disk_hits == 1
+    assert g0 is not graphs[0]                # a fresh unpickle, same content
+    np.testing.assert_array_equal(g0.pre.ell.cols, graphs[0].pre.ell.cols)
+    # the re-fetch evicted cfg[1] in turn (now the least recently used)
+    assert graph_key(adj_norm, cfgs[1]) not in reg._graphs
+
+    # a memory-only artifact has no disk fallback: eviction forces a build
+    reg2 = ArtifactRegistry(cache_dir=str(tmp_path / "m"), mem_capacity=1)
+    reg2.get_or_build(adj_norm, cfgs[0], persist=False)
+    reg2.get_or_build(adj_norm, cfgs[1], persist=False)  # evicts cfgs[0]
+    builds = reg2.stats.builds
+    reg2.get_or_build(adj_norm, cfgs[0], persist=False)
+    assert reg2.stats.builds == builds + 1 and reg2.stats.disk_hits == 0
+
+
+def test_registry_eviction_drops_forward_steps(toy_graph, tmp_path):
+    """Evicting a graph also drops its jitted forward steps, and a later
+    forward_step call transparently re-fetches the operand from disk."""
+    adj_norm, _ = toy_graph
+    cfg_a, cfg_b = _cfg(tau=3), _cfg(tau=4)
+    reg = ArtifactRegistry(cache_dir=str(tmp_path), mem_capacity=1)
+    fwd_a = reg.forward_step(adj_norm, cfg_a)
+    assert len(reg._forwards) == 1
+    reg.forward_step(adj_norm, cfg_b)         # evicts graph A + its forward
+    assert graph_key(adj_norm, cfg_a) not in reg._graphs
+    assert all(k[0] != graph_key(adj_norm, cfg_a) for k in reg._forwards)
+    fwd_a2 = reg.forward_step(adj_norm, cfg_a)
+    assert fwd_a2 is not fwd_a                # rebuilt against the re-fetch
+    assert reg.stats.disk_hits == 1 and reg.stats.builds == 2
+
+
 def test_registry_key_sensitivity(toy_graph):
     adj_norm, _ = toy_graph
     assert graph_key(adj_norm, _cfg()) != graph_key(adj_norm, _cfg(tau=4))
@@ -230,6 +273,47 @@ def test_bucket_ladder_covers_full_graph(toy_graph):
     assert b == top
     with pytest.raises(ValueError):
         ladder.bucket_for(top.nodes + 1, 1)
+
+
+def test_bucket_ladder_fractional_growth(toy_graph):
+    adj_norm, feats = toy_graph
+    cfg = _cfg()
+    reg = ArtifactRegistry()
+    graph = reg.get_or_build(adj_norm, cfg, persist=False)
+    coarse = BucketLadder.for_graph(graph, cfg, base_nodes=64, growth=4)
+    fine = BucketLadder.for_graph(graph, cfg, base_nodes=64, growth=1.3)
+    for ladder in (coarse, fine):
+        nodes = [b.nodes for b in ladder.entries]
+        assert nodes == sorted(set(nodes))               # strictly increasing
+        assert all(n % cfg.block_k == 0 for n in nodes)  # quantized
+        assert ladder.entries[-1].nodes >= graph.n_nodes  # covers the graph
+    assert len(fine.entries) > len(coarse.entries)
+    with pytest.raises(ValueError, match="growth"):
+        BucketLadder.for_graph(graph, cfg, base_nodes=64, growth=1.0)
+
+
+def test_auto_ladder_growth_is_deterministic_cost_choice(toy_graph):
+    from repro.plan import cost
+    from repro.plan.autoplan import GROWTH_CANDIDATES, choose_ladder_growth
+
+    adj_norm, _ = toy_graph
+    cfg = _cfg()
+    reg = ArtifactRegistry()
+    graph = reg.get_or_build(adj_norm, cfg, persist=False)
+    auto1 = BucketLadder.for_graph(graph, cfg, base_nodes=64, growth="auto")
+    auto2 = BucketLadder.for_graph(graph, cfg, base_nodes=64, growth="auto")
+    assert auto1.entries == auto2.entries                # deterministic
+
+    stats = cost.graph_stats_from_ell(graph.pre.ell)
+    g = choose_ladder_growth(stats, cfg, base_nodes=64, top_nodes=512)
+    assert g in GROWTH_CANDIDATES
+    # a tiny request horizon makes warmup compiles dominate: the pick can
+    # only move coarser (fewer rungs), never finer
+    g_short = choose_ladder_growth(stats, cfg, base_nodes=64, top_nodes=512,
+                                   horizon=1)
+    g_long = choose_ladder_growth(stats, cfg, base_nodes=64, top_nodes=512,
+                                  horizon=10**9)
+    assert g_short >= g >= g_long
 
 
 # ---------------------------------------------------------------------------

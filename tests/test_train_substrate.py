@@ -209,3 +209,61 @@ def test_masked_psum_mean():
         lambda g, a: masked_psum_mean(g, "dp", a), axis_name="dp"
     )(grads, alive)
     np.testing.assert_allclose(np.asarray(out["g"][0]), [4.0])
+
+
+def test_trainer_drops_straggler_and_masks_its_gradient(tmp_path):
+    """A replica that reports sustained drop-level step times is dropped by
+    the monitor, and because the trainer hands the alive mask to the step,
+    masked_psum_mean excludes its (poisoned) gradient from the average."""
+    from repro.dist import masked_psum_mean
+
+    n_rep = 4
+    slow = 3
+    # Per-replica "gradients": replica 3 is poisoned with a huge value, so
+    # the averaged update only stays sane once the mask zeroes it out.
+    grads = jnp.asarray([1.0, 1.0, 1.0, 1000.0])
+
+    def averaged(alive):
+        out = jax.vmap(
+            lambda g, a: masked_psum_mean({"g": g}, "dp", a),
+            axis_name="dp",
+        )(grads, jnp.asarray(alive))
+        return float(out["g"][0])
+
+    step_counter = {"n": 0}
+
+    def step_fn(state, _, alive):
+        step_counter["n"] += 1
+        # replica `slow` reports drop-level (5x) times every step
+        times = np.ones(n_rep)
+        times[slow] = 5.0
+        return (
+            {"w": state["w"] - 0.1 * averaged(alive)},
+            {"loss": 1.0, "replica_step_times": times},
+        )
+
+    cfg = TrainerConfig(total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=50,
+                        log_every=100, n_replicas=n_rep,
+                        straggler_drop_factor=4.0, straggler_patience=2)
+    state, report = run(cfg, {"w": jnp.zeros(())}, step_fn,
+                        iter(lambda: None, 1), log=lambda *_: None)
+    assert step_counter["n"] == 6
+    assert report.dropped_replicas == [slow]
+    # steps 1..2 averaged with the poisoned replica (patience window),
+    # later steps without it: mean over survivors is exactly 1.0
+    assert averaged([1.0, 1.0, 1.0, 0.0]) == pytest.approx(1.0)
+    # the final state reflects 2 poisoned steps + 4 masked steps
+    poisoned = (3.0 + 1000.0) / 4
+    want = -0.1 * (2 * poisoned + 4 * 1.0)
+    assert float(state["w"]) == pytest.approx(want)
+
+
+def test_trainer_backcompat_without_replica_monitoring(tmp_path):
+    """n_replicas=1 (default): step_fn keeps its historical 2-arg shape."""
+    def step_fn(state, _):
+        return state, {"loss": 0.5}
+
+    cfg = TrainerConfig(total_steps=2, ckpt_dir=str(tmp_path), log_every=100)
+    _, report = run(cfg, {"w": jnp.zeros(1)}, step_fn, iter(lambda: None, 1),
+                    log=lambda *_: None)
+    assert report.steps_done == 2 and report.dropped_replicas == []
