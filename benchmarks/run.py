@@ -17,6 +17,7 @@ from benchmarks import (  # noqa: E402
     bench_area,
     bench_buffer_sizes,
     bench_flexible_k,
+    bench_pipeline,
     bench_plan,
     bench_queue,
     bench_serve,
@@ -38,6 +39,7 @@ def main() -> None:
         ("SpMM kernel", bench_spmm_kernel),
         ("SpMM sharded (1 vs N devices)", bench_spmm_sharded),
         ("Autoplan vs static plan", bench_plan),
+        ("Pipelined multi-layer forward (sharded activations)", bench_pipeline),
         ("Serving engine", bench_serve),
         ("Async queue (open-loop Poisson)", bench_queue),
     ]:

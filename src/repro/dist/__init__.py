@@ -21,7 +21,13 @@ and under ``jax.vmap``-emulated replica axes, so the whole import chain is
 testable without hardware.
 """
 
-from repro.dist.collectives import masked_psum_mean, segment_psum
+from repro.dist.collectives import (
+    LEDGER,
+    CollectiveLedger,
+    masked_psum_mean,
+    segment_psum,
+    segment_reduce_scatter,
+)
 from repro.dist.policy import constrain, sharding_policy
 from repro.dist.sharding import ShardingPlan, batch_spec
 from repro.dist.straggler import StragglerMonitor, StragglerVerdict
@@ -36,6 +42,9 @@ __all__ = [
     "constrain",
     "masked_psum_mean",
     "segment_psum",
+    "segment_reduce_scatter",
+    "CollectiveLedger",
+    "LEDGER",
     "sharding_policy",
     "viable_mesh_shapes",
 ]

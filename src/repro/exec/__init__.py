@@ -17,8 +17,15 @@ over the ``data`` mesh axis from the same code:
 * ``dispatch`` — :func:`execute`, the one pad/dispatch/segment-accumulate
                  implementation shared by all entry points;
 * ``sharded``  — :func:`execute_sharded`, ``shard_map`` over the ``data``
-                 axis with a ``dist.collectives.segment_psum`` reduction
-                 of vertex-cut partial products.
+                 axis with a pluggable epilogue: ``segment_psum``
+                 (replicated output) or ``segment_reduce_scatter``
+                 (row-sharded output for a following sharded layer), plus
+                 optional feature-axis sharding of the dense operand;
+* ``pipeline`` — :class:`GcnPipelinePlan` / :func:`plan_pipeline` /
+                 :func:`pipeline_forward`: joint planning of a whole GCN
+                 stack — per-layer impl/blocks, one data-mesh width, and
+                 the activation layout at every layer boundary — so
+                 activations stay sharded end-to-end.
 
 Layering: ``exec`` imports ``core``, ``kernels`` and ``dist``; ``core``
 reaches back only through deferred imports inside ``spmm_ell`` /
@@ -33,14 +40,28 @@ from repro.exec.plan import (
 from repro.exec.operands import ShardedOperands, SpmmOperands, shard_operands
 from repro.exec.dispatch import execute, sub_row_products
 from repro.exec.sharded import execute_sharded
+from repro.exec.pipeline import (
+    GcnPipelinePlan,
+    LayerPlan,
+    chain_layouts,
+    pipeline_forward,
+    plan_pipeline,
+    static_pipeline,
+)
 
 __all__ = [
+    "GcnPipelinePlan",
+    "LayerPlan",
+    "chain_layouts",
+    "static_pipeline",
     "ShardedOperands",
     "SpmmOperands",
     "SpmmPlan",
     "execute",
     "execute_sharded",
+    "pipeline_forward",
     "plan_for_config",
+    "plan_pipeline",
     "reset_degradation_warnings",
     "shard_operands",
     "sub_row_products",

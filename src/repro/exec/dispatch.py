@@ -113,7 +113,7 @@ def execute(plan: SpmmPlan, operands: SpmmOperands, dense: jax.Array) -> jax.Arr
     per-impl product kernels above.
     """
     plan = plan.resolve(schedulable=operands.schedulable)
-    if plan.sharded:
+    if plan.sharded or plan.feature_sharded:
         from repro.exec.sharded import execute_sharded  # deferred: no cycle
 
         return execute_sharded(plan, operands, dense)

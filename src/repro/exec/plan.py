@@ -24,6 +24,7 @@ from typing import Optional
 import jax
 
 VALID_IMPLS = ("reference", "pallas", "pallas_sparse")
+VALID_LAYOUTS = ("replicated", "row_sharded")
 
 # One-time warning registry: reasons already surfaced to the user.
 _DEGRADE_WARNED: set = set()
@@ -56,6 +57,16 @@ class SpmmPlan:
     the sharded path (``exec.sharded``); no mesh — or a trivial 1-device
     one — runs single-device.  ``effective_impl``/``degraded_reason`` are
     the resolution record; they are ``None`` on an unresolved plan.
+
+    ``dense_layout``/``out_layout`` pick the sharded path's prologue and
+    epilogue: a ``row_sharded`` output is produced with a reduce-scatter
+    (each shard keeps its contiguous slice of output rows — the layout a
+    following sharded layer consumes), a ``row_sharded`` dense operand is
+    all-gathered inside the shard body.  Both degrade to ``replicated``
+    semantics on a 1-wide data axis.  ``feature_axis`` names a second
+    mesh axis to split the dense operand's feature dimension over (each
+    feature-shard computes the full row space for its F slice; the
+    output stays feature-sharded, the gather implicit in its layout).
     """
 
     impl: str = "reference"
@@ -68,6 +79,9 @@ class SpmmPlan:
     mesh: Optional[jax.sharding.Mesh] = None
     data_axis: str = "data"
     shard_split: str = "nnz"          # sub-row split: nnz-weighted | uniform
+    dense_layout: str = "replicated"  # dense operand: replicated | row_sharded
+    out_layout: str = "replicated"    # epilogue: psum | reduce-scatter
+    feature_axis: Optional[str] = None  # mesh axis splitting the F dimension
     effective_impl: Optional[str] = None
     degraded_reason: Optional[str] = None
 
@@ -81,6 +95,12 @@ class SpmmPlan:
                 f"unknown shard_split: {self.shard_split} "
                 "(expected 'nnz' or 'uniform')"
             )
+        for name in ("dense_layout", "out_layout"):
+            if getattr(self, name) not in VALID_LAYOUTS:
+                raise ValueError(
+                    f"unknown {name}: {getattr(self, name)} "
+                    f"(expected one of {VALID_LAYOUTS})"
+                )
 
     # -- placement ----------------------------------------------------------
 
@@ -93,6 +113,20 @@ class SpmmPlan:
     @property
     def sharded(self) -> bool:
         return self.n_shards > 1
+
+    @property
+    def n_feature_shards(self) -> int:
+        if (
+            self.mesh is None
+            or self.feature_axis is None
+            or self.feature_axis not in self.mesh.shape
+        ):
+            return 1
+        return int(self.mesh.shape[self.feature_axis])
+
+    @property
+    def feature_sharded(self) -> bool:
+        return self.n_feature_shards > 1
 
     # -- resolution ---------------------------------------------------------
 

@@ -1,25 +1,49 @@
-"""Sharded SpMM execution over the ``data`` mesh axis.
+"""Sharded SpMM execution over the ``data`` (and optional feature) mesh axes.
 
 The row-wise, product-based dataflow makes vertex-cut partitions the
 natural unit of parallel work: each shard owns a contiguous slice of the
 sub-row axis (a run of vertex-cut partitions), computes its local sub-row
 products with the *same* kernel the single-device path uses, folds them
 into a full-height partial output with the local segment-accumulate, and
-the partials are reduced into original output rows with the
-``dist.collectives.segment_psum`` cross-shard reduction.  Sub-rows of one
-original row may land on different shards — the psum is exactly the CMP
-partial-sum path of the paper, stretched across the mesh.
+the partials are reduced across the mesh.  Sub-rows of one original row
+may land on different shards — the cross-shard reduction is exactly the
+CMP partial-sum path of the paper, stretched across the mesh.
+
+The reduction epilogue is pluggable (``SpmmPlan.out_layout``):
+
+* ``replicated``  — ``dist.collectives.segment_psum``: every device ends
+  with the full-height output (the historical behaviour, and what a
+  non-sharded consumer needs);
+* ``row_sharded`` — ``dist.collectives.segment_reduce_scatter``: each
+  device keeps only its contiguous slice of output rows, at half the
+  collective bytes.  This is the layout a *following* sharded layer
+  consumes: its combination matmul runs on local rows, and the dense
+  operand is all-gathered inside this executor's shard body
+  (``SpmmPlan.dense_layout="row_sharded"``) only where the aggregation
+  actually needs full height.
+
+``SpmmPlan.feature_axis`` names a second mesh axis that splits the dense
+operand's feature dimension: each feature-shard computes the full row
+space for its F slice (the sparse operand is replicated across that
+axis), and the output stays feature-sharded — the gather is implicit in
+the output layout.  Row sharding balances nonzeros; feature sharding
+keeps wide-F layers from leaving the rest of the mesh idle.
 
 The sub-row boundaries are nnz-weighted by default (the cost model's
 ``balanced_split_points``; ``SpmmPlan.shard_split="uniform"`` restores
 the historical equal-row-count split), so a hub-heavy shard does not
-serialize the cross-shard psum behind its extra nonzeros.
+serialize the cross-shard reduction behind its extra nonzeros.
 
 ``pallas_sparse`` keeps its block-skipping schedule per shard: each
 shard's (row-block, k-tile) pair list is planned host-side from its own
 occupancy, then padded to a common length with no-op visits to a reserved
 all-padding row block (they accumulate exact zeros), so every shard runs
 one identical scalar-prefetched program.
+
+Every dispatch records its epilogue's per-device collective bytes and the
+activation DRAM writeback into ``dist.collectives.LEDGER`` — recording is
+host-side (never inside traced code), so totals are per execution and
+immune to jit caching.
 """
 
 from __future__ import annotations
@@ -30,20 +54,55 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.collectives import segment_psum
+from repro.dist.collectives import (
+    LEDGER,
+    segment_psum,
+    segment_reduce_scatter,
+)
 from repro.exec.operands import SpmmOperands, shard_operands
 from repro.exec.plan import SpmmPlan
+
+
+def _round_up(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def _record_traffic(plan: SpmmPlan, n_out: int, n_out_pad: int, f: int,
+                    dense_rows: int, dtype_bytes: int) -> None:
+    """Ledger entries for one dispatch: epilogue collective bytes
+    (per-device ring arithmetic) + activation writeback under the chosen
+    output layout."""
+    n = plan.n_shards
+    if n > 1 and plan.dense_layout == "row_sharded":
+        LEDGER.record(
+            "all_gather", (n - 1) / n * dense_rows * f * dtype_bytes)
+    if n > 1 and plan.out_layout == "row_sharded":
+        LEDGER.record(
+            "reduce_scatter", (n - 1) / n * n_out_pad * f * dtype_bytes)
+        LEDGER.record("activation_dram", n_out_pad * f * dtype_bytes, n=0)
+    elif n > 1:
+        LEDGER.record("psum", 2.0 * (n - 1) / n * n_out * f * dtype_bytes)
+        LEDGER.record("activation_dram", n * n_out * f * dtype_bytes, n=0)
 
 
 def execute_sharded(
     plan: SpmmPlan, operands: SpmmOperands, dense: jax.Array
 ) -> jax.Array:
-    """``A @ dense`` sharded over ``plan.data_axis``; exact parity with the
-    single-device path for every impl (modulo float summation order)."""
+    """``A @ dense`` sharded over ``plan.data_axis`` (and optionally
+    ``plan.feature_axis``); exact parity with the single-device path for
+    every impl (modulo float summation order).
+
+    A ``row_sharded`` output is the *padded* height
+    ``round_up(n_out_rows, n_shards)`` with each data shard holding its
+    contiguous row slice; the pad rows are exact zeros and sit past every
+    real row, so feeding the array straight into a consumer that indexes
+    real rows (the next layer's combination matmul) is safe.
+    """
     plan = plan.resolve(schedulable=operands.schedulable)
-    mesh, axis = plan.mesh, plan.data_axis
+    mesh, axis, f_axis = plan.mesh, plan.data_axis, plan.feature_axis
     n_shards = plan.n_shards
-    assert mesh is not None and n_shards > 1
+    m_shards = plan.n_feature_shards
+    assert mesh is not None and (n_shards > 1 or m_shards > 1)
     n_sub_rows = int((np.asarray(operands.row_map) >= 0).sum())
     if n_shards > max(n_sub_rows, 1):
         raise ValueError(
@@ -52,45 +111,87 @@ def execute_sharded(
             f"a mesh with '{axis}' <= {max(n_sub_rows, 1)}"
         )
     impl = plan.effective_impl
-    sh = shard_operands(
-        operands,
-        n_shards,
-        plan.block_rows,
-        reserve_empty_block=(impl == "pallas_sparse"),
-        split=plan.shard_split,
-    )
+    n_out = operands.n_out_rows
+    n_out_pad = _round_up(n_out, n_shards)
+    row_sharded_out = plan.out_layout == "row_sharded" and n_shards > 1
+    row_sharded_dense = plan.dense_layout == "row_sharded" and n_shards > 1
+    out_rows = n_out_pad if row_sharded_out else n_out
+
+    if n_shards > 1:
+        sh = shard_operands(
+            operands,
+            n_shards,
+            plan.block_rows,
+            reserve_empty_block=(impl == "pallas_sparse"),
+            split=plan.shard_split,
+        )
+        cols_h, vals_h, rmap_h = sh.cols, sh.vals, sh.row_map
+    else:
+        sh = None
+        cols_h, vals_h, rmap_h = (
+            np.asarray(operands.cols), np.asarray(operands.vals),
+            np.asarray(operands.row_map),
+        )
+
     dense = jnp.asarray(dense)
     f = dense.shape[1]
-    n_out = sh.n_out_rows
-    cols = jnp.asarray(sh.cols)
-    vals = jnp.asarray(sh.vals, dtype=dense.dtype)
-    rmap = jnp.asarray(sh.row_map)
+    dtype_bytes = dense.dtype.itemsize
+    # Feature sharding needs F divisible by the feature-axis width; pad
+    # host-side (zero columns contribute zero products) and trim on exit.
+    f_pad_m = _round_up(f, m_shards)
+    if f_pad_m != f:
+        dense = jnp.pad(dense, ((0, 0), (0, f_pad_m - f)))
+    f_local = f_pad_m // m_shards
+    cols = jnp.asarray(cols_h)
+    vals = jnp.asarray(vals_h, dtype=dense.dtype)
+    rmap = jnp.asarray(rmap_h)
+    _record_traffic(plan, n_out, n_out_pad, f_pad_m, dense.shape[0],
+                    dtype_bytes)
+
+    row_spec = axis if n_shards > 1 else None
+    dense_spec = P(axis if row_sharded_dense else None,
+                   f_axis if m_shards > 1 else None)
+    out_spec = P(axis if row_sharded_out else None,
+                 f_axis if m_shards > 1 else None)
+
+    def epilogue(sub, m):
+        if n_shards == 1:
+            from repro.core.spmm import _segment_accumulate
+
+            return _segment_accumulate(sub, m, out_rows)
+        if row_sharded_out:
+            return segment_reduce_scatter(sub, m, n_out_pad, axis)
+        return segment_psum(sub, m, n_out, axis)
+
+    def prologue(d):
+        if row_sharded_dense:
+            d = jax.lax.all_gather(d, axis, axis=0, tiled=True)
+        return d
 
     if impl == "reference":
         from repro.exec.dispatch import _sub_row_products_ref
 
         def body(c, v, m, d):
-            return segment_psum(_sub_row_products_ref(c, v, d), m, n_out, axis)
+            return epilogue(_sub_row_products_ref(c, v, prologue(d)), m)
 
         fn = shard_map(
             body,
             mesh=mesh,
-            in_specs=(P(axis), P(axis), P(axis), P()),
-            out_specs=P(),
+            in_specs=(P(row_spec), P(row_spec), P(row_spec), dense_spec),
+            out_specs=out_spec,
             check_rep=False,  # psum replicates; pallas has no rep rule anyway
         )
-        return fn(cols, vals, rmap, dense)
+        return fn(cols, vals, rmap, dense)[:, :f]
 
     from repro.kernels import flexvector_spmm as fv  # deferred, as in dispatch
-
-    # Shard slices are already block_rows-aligned; this only pads dense.
-    cols, vals, dense_p, _ = fv.pad_operands(
-        cols, vals, dense, plan.block_rows, plan.block_k, plan.block_f
-    )
 
     if impl == "pallas":
 
         def body(c, v, m, d):
+            r_loc = c.shape[0]
+            c, v, d, _ = fv.pad_operands(
+                c, v, prologue(d), plan.block_rows, plan.block_k, plan.block_f
+            )
             sub = fv.spmm_ell_dense_grid(
                 c,
                 v,
@@ -100,22 +201,42 @@ def execute_sharded(
                 block_f=plan.block_f,
                 out_dtype=plan.out_dtype,
                 interpret=plan.interpret,
-            )[:, :f]
-            return segment_psum(sub, m, n_out, axis)
+            )[:r_loc, :f_local]
+            return epilogue(sub, m)
 
         fn = shard_map(
             body,
             mesh=mesh,
-            in_specs=(P(axis), P(axis), P(axis), P()),
-            out_specs=P(),
+            in_specs=(P(row_spec), P(row_spec), P(row_spec), dense_spec),
+            out_specs=out_spec,
             check_rep=False,
         )
-        return fn(cols, vals, rmap, dense_p)
+        return fn(cols, vals, rmap, dense)[:, :f]
 
     # pallas_sparse: per-shard block-skipping schedules, padded to one length.
-    rb, kb, first = _padded_shard_schedules(plan, sh, f)
+    if n_shards > 1:
+        rb, kb, first = _padded_shard_schedules(plan, sh, f_local)
+    else:
+        from repro.core.dataflow import plan_kernel_grid
+
+        grid = plan_kernel_grid(
+            operands.ell,
+            f_local,
+            block_rows=plan.block_rows,
+            block_k=plan.block_k,
+            block_f=plan.block_f,
+            skip_empty=True,
+            hot_k_first=plan.hot_k_first,
+        )
+        rb = grid.pairs[:, 0].astype(np.int32)
+        kb = grid.pairs[:, 1].astype(np.int32)
+        first = grid.first_k.astype(np.int32)
 
     def body(rb_s, kb_s, first_s, c, v, m, d):
+        r_loc = c.shape[0]
+        c, v, d, _ = fv.pad_operands(
+            c, v, prologue(d), plan.block_rows, plan.block_k, plan.block_f
+        )
         sub = fv.spmm_ell_sparse_grid(
             c,
             v,
@@ -128,20 +249,21 @@ def execute_sharded(
             block_f=plan.block_f,
             out_dtype=plan.out_dtype,
             interpret=plan.interpret,
-        )[:, :f]
-        return segment_psum(sub, m, n_out, axis)
+        )[:r_loc, :f_local]
+        return epilogue(sub, m)
 
     fn = shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis), P()),
-        out_specs=P(),
+        in_specs=(P(row_spec), P(row_spec), P(row_spec), P(row_spec),
+                  P(row_spec), P(row_spec), dense_spec),
+        out_specs=out_spec,
         check_rep=False,
     )
     return fn(
         jnp.asarray(rb), jnp.asarray(kb), jnp.asarray(first), cols, vals,
-        rmap, dense_p,
-    )
+        rmap, dense,
+    )[:, :f]
 
 
 def _padded_shard_schedules(plan, sh, feature_dim):

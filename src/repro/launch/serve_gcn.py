@@ -147,6 +147,15 @@ def main() -> None:
             print(f"[autoplan] bucket ({bucket.nodes}, {bucket.rows}): "
                   f"{bplan.effective_impl} rows={bplan.block_rows} "
                   f"k={bplan.block_k} f={bplan.block_f}")
+        # per-layer plans from the pipeline planner (the ones the
+        # coalesced forwards actually trace with)
+        for (bucket, _), layer_plans in sorted(
+                engine.batcher._layer_plans.items()):
+            chain = " -> ".join(
+                f"L{i}:{p.effective_impl}/{p.block_rows}x{p.block_k}"
+                f"x{p.block_f}" for i, p in enumerate(layer_plans))
+            print(f"[autoplan] bucket ({bucket.nodes}, {bucket.rows}) "
+                  f"layers: {chain}")
 
     rng = np.random.default_rng(0)
     n_nodes = engine.graph.n_nodes

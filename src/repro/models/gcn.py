@@ -89,6 +89,7 @@ def gcn_forward(
     cfg: GCNConfig,
     plan=None,
     mesh=None,
+    out_layout: str = "replicated",
 ) -> jax.Array:
     """Full-graph forward pass.
 
@@ -102,31 +103,54 @@ def gcn_forward(
     segment-psum folding vertex-cut partials back into output rows.
     Without either, the plan is derived from ``cfg`` and runs
     single-device — the same dispatch path either way.  ``plan="auto"``
-    hands the choice to the cost model instead: ``repro.plan.autoplan``
-    picks impl, block sizes and data-mesh width by estimated traffic for
-    *this* graph (``mesh`` then bounds the candidate widths).
+    hands the *whole stack* to the cost model: ``repro.exec.pipeline``
+    jointly picks per-layer impl/block sizes, the data-mesh width and the
+    activation layout at every layer boundary (``mesh`` then bounds the
+    candidate widths), so consecutive sharded layers chain reduce-scatter
+    epilogues instead of round-tripping activations through replicated
+    form.  A :class:`~repro.exec.pipeline.GcnPipelinePlan` can also be
+    passed directly as ``plan``.  ``out_layout="row_sharded"`` asks for
+    the output activation left row-sharded (padded height
+    ``round_up(n_nodes, width)``, no inverse permutation) — the form a
+    following sharded stage consumes.
     """
+    from repro.exec.pipeline import GcnPipelinePlan, pipeline_forward
+
+    if isinstance(plan, GcnPipelinePlan):
+        return pipeline_forward(params, graph, features, plan)
     if isinstance(plan, str):
         if plan != "auto":
             raise ValueError(f"unknown plan: {plan!r} (expected 'auto')")
-        from repro.exec import plan_for_config
+        from repro.exec.pipeline import plan_pipeline
 
-        plan = plan_for_config(
-            cfg, mesh=mesh, ell=graph.pre.ell, feature_dim=cfg.hidden_dim
+        pplan = plan_pipeline(
+            cfg, graph.pre.ell, mesh=mesh, n_layers=len(params),
+            out_layout=out_layout,
         )
-    elif plan is None:
+        return pipeline_forward(params, graph, features, pplan)
+    if plan is None:
         from repro.exec import plan_for_config
 
         plan = plan_for_config(cfg, mesh=mesh)
+    # A static plan applies uniformly to every layer; a row-sharded output
+    # request swaps only the final epilogue (meaningful on a >1-wide data
+    # axis — on one device the layouts coincide and the standard replicated
+    # output comes back).
+    shard_out = out_layout == "row_sharded" and plan.n_shards > 1
     perm = jnp.asarray(graph.pre.perm)
     x = features[perm]
     n_layers = len(params)
     for i in range(n_layers):
         p = params[f"layer_{i}"]
+        layer_plan = plan
+        if shard_out and i == n_layers - 1:
+            layer_plan = dataclasses.replace(plan, out_layout="row_sharded")
         xw = x @ p["w"] + p["b"]                    # combination (dense)
-        x = spmm_ell(graph.pre.ell, xw, plan=plan)  # aggregation (sparse)
+        x = spmm_ell(graph.pre.ell, xw, plan=layer_plan)  # aggregation
         if i < n_layers - 1:
             x = jax.nn.relu(x)
+    if shard_out:
+        return x          # permuted order, padded height, row-sharded
     return x[jnp.asarray(graph.inv)]
 
 

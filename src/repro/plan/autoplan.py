@@ -68,6 +68,7 @@ def choose_plan(
     impls: Optional[Sequence[str]] = None,
     mesh=None,
     n_devices: Optional[int] = None,
+    widths: Optional[Sequence[int]] = None,
     block_candidates: Sequence[int] = BLOCK_CANDIDATES,
     interpret: Optional[bool] = None,
     dtype_bytes: int = 4,
@@ -104,21 +105,46 @@ def choose_plan(
     if mesh is not None:
         mesh_width = (
             int(mesh.shape["data"]) if "data" in dict(mesh.shape) else 1)
-        widths: Tuple[int, ...] = tuple(sorted({1, mesh_width}))
+        if widths is None:
+            widths = tuple(sorted({1, mesh_width}))
     else:
         mesh_width = 1
-        widths = candidate_widths(max(n_devices or 1, 1))
+        if widths is None:
+            widths = candidate_widths(max(n_devices or 1, 1))
+    # An explicit ``widths`` pins the placement candidates (the pipeline
+    # planner fixes one common width across layers so row-sharded layouts
+    # chain); the static baseline is still scored at the mesh width.
     widths = tuple(
-        w for w in widths if w == 1 or w <= max(stats.n_sub_rows, 1))
+        w for w in widths if w == 1 or w <= max(stats.n_sub_rows, 1)
+    ) or (1,)
 
     def blocks_for(base: int) -> Tuple[int, ...]:
         return tuple(sorted(set(block_candidates) | {base}))
+
+    # Width candidates are priced against the *achievable* balance of the
+    # nnz-weighted contiguous sub-row split each width would actually use
+    # (exec.sharded's default): a hub-heavy graph whose best w-way split
+    # still leaves one shard carrying imb x the mean work gets its
+    # per-device terms scaled by imb, so autoplan stops at the split count
+    # where the residual imbalance eats the division of labor.
+    _imb_cache: dict = {1: 1.0}
+
+    def width_imbalance(width: int) -> float:
+        hit = _imb_cache.get(width)
+        if hit is None:
+            if stats.row_nnz is None:
+                hit = 1.0
+            else:
+                bounds = cost_mod.balanced_split_points(stats.row_nnz, width)
+                hit = cost_mod.split_imbalance(stats.row_nnz, bounds)
+            _imb_cache[width] = hit
+        return hit
 
     def score(impl, br, bk, bf, width):
         return cost_mod.spmm_cost(
             stats, feature_dim, impl=impl, block_rows=br, block_k=bk,
             block_f=bf, n_shards=width, dtype_bytes=dtype_bytes,
-            device=device,
+            shard_imbalance=width_imbalance(width), device=device,
         )
 
     # The static default leads: what plan_for_config(cfg[, mesh]) builds.
@@ -140,6 +166,10 @@ def choose_plan(
                             best, best_cost = (impl, br, bk, bf, w), c
 
     impl, br, bk, bf, width = best
+    hot_k_first = True
+    if impl == "pallas_sparse" and stats.ell is not None:
+        hot_k_first = choose_hot_k_first(
+            stats.ell, feature_dim, block_rows=br, block_k=bk, block_f=bf)
     if width <= 1:
         chosen_mesh = None
     elif mesh is not None and width == mesh_width:
@@ -150,7 +180,7 @@ def choose_plan(
         chosen_mesh = make_data_mesh(width)
     plan = SpmmPlan(
         impl=impl, block_rows=br, block_k=bk, block_f=bf,
-        interpret=interpret, mesh=chosen_mesh,
+        interpret=interpret, mesh=chosen_mesh, hot_k_first=hot_k_first,
     )
     static_plan = SpmmPlan(
         impl=base_impl, block_rows=base_blocks[0], block_k=base_blocks[1],
@@ -160,6 +190,40 @@ def choose_plan(
         plan=plan, cost=best_cost, static_plan=static_plan,
         static_cost=static_cost, n_candidates=n_cand,
     )
+
+
+def choose_hot_k_first(
+    ell: TiledELL,
+    feature_dim: int,
+    *,
+    block_rows: int = 128,
+    block_k: int = 128,
+    block_f: int = 128,
+) -> bool:
+    """Pick the ``pallas_sparse`` k-tile visit order that minimizes dense
+    k-tile switches.
+
+    The block-skipping grid streams a fresh dense k-tile into VMEM every
+    time consecutive schedule steps change ``k`` — the schedule's dominant
+    re-fill traffic.  Score both orderings (hot-tiles-first vs natural
+    row-major) by counting switches in the planned pair list and keep the
+    cheaper one; ties keep ``hot_k_first=True`` (the historical default).
+    Deterministic: the grids are, so the counts are.
+    """
+    import numpy as np
+
+    from repro.core.dataflow import plan_kernel_grid
+
+    def switches(hot: bool) -> int:
+        pairs = plan_kernel_grid(
+            ell, feature_dim, block_rows=block_rows, block_k=block_k,
+            block_f=block_f, skip_empty=True, hot_k_first=hot,
+        ).pairs
+        if len(pairs) <= 1:
+            return 0
+        return int(np.count_nonzero(np.diff(pairs[:, 1]) != 0))
+
+    return switches(True) <= switches(False)
 
 
 def autoplan(graph, feature_dim: int, cfg=None, **kw) -> SpmmPlan:

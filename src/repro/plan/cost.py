@@ -233,6 +233,47 @@ def psum_bytes(n_out_rows: int, feature_dim: int, n_shards: int,
     return 2.0 * buf * (n_shards - 1) / n_shards
 
 
+def reduce_scatter_bytes(n_out_rows: int, feature_dim: int, n_shards: int,
+                         dtype_bytes: int = 4) -> float:
+    """Per-device bytes of the row-sharded epilogue
+    (``segment_reduce_scatter``): ring reduce-scatter moves (n-1)/n of the
+    buffer — half the all-reduce — over the *padded* output height
+    (``round_up`` to the axis width, the height the next layer consumes)."""
+    if n_shards <= 1:
+        return 0.0
+    buf = float(_round_up(n_out_rows, n_shards)) * feature_dim * dtype_bytes
+    return buf * (n_shards - 1) / n_shards
+
+
+def all_gather_bytes(n_rows: int, feature_dim: int, n_shards: int,
+                     dtype_bytes: int = 4) -> float:
+    """Per-device bytes to all-gather a row-sharded dense operand inside
+    the shard body (ring all-gather: (n-1)/n of the full buffer)."""
+    if n_shards <= 1:
+        return 0.0
+    buf = float(_round_up(n_rows, n_shards)) * feature_dim * dtype_bytes
+    return buf * (n_shards - 1) / n_shards
+
+
+def activation_writeback_bytes(
+    n_out_rows: int,
+    feature_dim: int,
+    n_shards: int,
+    layout: str = "replicated",
+    dtype_bytes: int = 4,
+) -> float:
+    """Total DRAM bytes the mesh writes to materialize one layer's output
+    activation under ``layout``: a replicated activation is written by
+    *every* device (n x the full height), a row-sharded one is written
+    once across the mesh (the padded height).  This is the term that makes
+    keeping activations sharded between layers win in the pipeline DP even
+    before counting the halved collective."""
+    n = max(n_shards, 1)
+    if layout == "row_sharded" and n > 1:
+        return float(_round_up(n_out_rows, n)) * feature_dim * dtype_bytes
+    return float(n) * n_out_rows * feature_dim * dtype_bytes
+
+
 def spmm_cost(
     stats: GraphStats,
     feature_dim: int,
@@ -242,6 +283,9 @@ def spmm_cost(
     block_k: int = 128,
     block_f: int = 128,
     n_shards: int = 1,
+    out_layout: str = "replicated",
+    dense_layout: str = "replicated",
+    shard_imbalance: float = 1.0,
     dtype_bytes: int = 4,
     idx_bytes: int = 4,
     device: DeviceModel = TPU_V5E,
@@ -259,7 +303,12 @@ def spmm_cost(
       visited (exact occupancy when the host ``TiledELL`` is available).
 
     Sharding divides compute/DRAM terms across ``n_shards`` and adds the
-    full-height segment-psum collective term.
+    epilogue collective term: the full-height segment-psum by default, or
+    — ``out_layout="row_sharded"`` — the reduce-scatter at half the bytes;
+    ``dense_layout="row_sharded"`` adds the in-body all-gather of the
+    dense operand.  ``shard_imbalance`` (``split_imbalance`` of the chosen
+    sub-row split, >= 1.0) scales the per-device compute/memory terms: the
+    roofline waits on the heaviest shard, not the mean one.
     """
     f = max(feature_dim, 1)
     r_pad = _round_up(stats.padded_rows, block_rows)
@@ -293,13 +342,21 @@ def spmm_cost(
 
     out_bytes = float(r_pad + stats.n_out_rows) * f * dtype_bytes
     dram_bytes = dense_bytes + sparse_bytes + out_bytes
-    coll_bytes = psum_bytes(stats.n_out_rows, f, n_shards, dtype_bytes)
+    if out_layout == "row_sharded":
+        coll_bytes = reduce_scatter_bytes(
+            stats.n_out_rows, f, n_shards, dtype_bytes)
+    else:
+        coll_bytes = psum_bytes(stats.n_out_rows, f, n_shards, dtype_bytes)
+    if dense_layout == "row_sharded":
+        coll_bytes += all_gather_bytes(
+            stats.n_dense_rows, f, n_shards, dtype_bytes)
 
     shards = max(n_shards, 1)
+    imb = max(float(shard_imbalance), 1.0)
     compute, memory, collective, dominant = roofline_seconds(
-        flops / shards, dram_bytes / shards, coll_bytes, device
+        flops / shards * imb, dram_bytes / shards * imb, coll_bytes, device
     )
-    compute += (grid_steps / shards) * device.step_overhead_s
+    compute += (grid_steps / shards) * imb * device.step_overhead_s
     if compute > max(memory, collective):
         dominant = "compute"
     return CostBreakdown(

@@ -316,15 +316,28 @@ class ServeRuntime:
                 "running, wait on the request futures instead")
         return self.loop.drain()
 
-    def shutdown(self, timeout: Optional[float] = 5.0) -> None:
-        """Stop the worker, then cancel everything still queued.
+    def shutdown(self, timeout: Optional[float] = 5.0,
+                 drain: bool = False) -> None:
+        """Stop the runtime; ``drain=True`` makes the stop graceful.
 
-        A request the loop never closed must not leave its future pending
-        forever — a caller blocked on ``future.result()`` with no timeout
-        would hang past shutdown.  Cancelled requests raise
+        Both modes close the queue first, so every later ``submit`` is
+        rejected with ``QueueClosedError`` instead of landing work that
+        would never run.  With ``drain=True`` the already-admitted
+        requests are then flushed through the scheduler and executed on
+        the calling thread — batch membership is decided under the
+        queue's lock inside ``poll``/``flush``, so a still-running worker
+        and the drain never close the same request twice — and only then
+        is the worker joined.  With ``drain=False`` the worker is stopped
+        immediately and everything still queued is cancelled: a request
+        the loop never closed must not leave its future pending forever —
+        a caller blocked on ``future.result()`` with no timeout would
+        hang past shutdown.  Cancelled requests raise
         ``concurrent.futures.CancelledError`` at the waiter and are
         counted under the ``cancelled`` metric.  Idempotent.
         """
+        self.queue.close()
+        if drain:
+            self.loop.drain()
         self.loop.shutdown(timeout)
         with self.queue.lock:
             leftovers = [

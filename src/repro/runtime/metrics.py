@@ -19,22 +19,54 @@ import numpy as np
 
 
 class Histogram:
-    """Latency histogram: raw samples + percentile summaries.
+    """Latency histogram: bounded reservoir + percentile summaries.
 
-    Samples are kept raw (seconds) rather than pre-bucketed — serving
-    runs are bounded by the request count, and exact percentiles keep the
-    virtual-clock tests assertion-exact.
+    Samples are kept raw (seconds) up to ``max_samples``; past that,
+    Vitter's algorithm R keeps a uniform reservoir so memory stays bounded
+    for a long-lived runtime while percentiles stay statistically honest.
+    Short runs (every test, every bounded benchmark) never overflow the
+    reservoir, so their percentiles remain assertion-exact.  The
+    replacement draw comes from an internal 64-bit LCG, not the global
+    RNG: deterministic across runs and isolated from user seeding.
+    ``count``/``mean``/``max`` track *all* observations, reservoir or not,
+    and the summary schema is unchanged.
     """
 
-    def __init__(self) -> None:
+    #: Default reservoir bound; ~16 KiB of floats per histogram.
+    MAX_SAMPLES = 2048
+
+    def __init__(self, max_samples: int = MAX_SAMPLES) -> None:
+        if max_samples < 1:
+            raise ValueError(f"max_samples must be >= 1, got {max_samples}")
+        self.max_samples = int(max_samples)
         self._values: List[float] = []
+        self._count = 0
+        self._sum = 0.0
+        self._max = 0.0
+        self._lcg = 0x9E3779B97F4A7C15    # fixed seed: deterministic runs
+
+    def _rand_below(self, bound: int) -> int:
+        self._lcg = (
+            self._lcg * 6364136223846793005 + 1442695040888963407
+        ) & 0xFFFFFFFFFFFFFFFF
+        return (self._lcg >> 33) % bound
 
     def observe(self, value_s: float) -> None:
-        self._values.append(float(value_s))
+        v = float(value_s)
+        self._count += 1
+        self._sum += v
+        if self._count == 1 or v > self._max:
+            self._max = v
+        if len(self._values) < self.max_samples:
+            self._values.append(v)
+        else:
+            j = self._rand_below(self._count)
+            if j < self.max_samples:
+                self._values[j] = v
 
     @property
     def count(self) -> int:
-        return len(self._values)
+        return self._count
 
     def percentile(self, q: float) -> float:
         if not self._values:
@@ -47,11 +79,11 @@ class Histogram:
                     "max": 0.0}
         v = np.asarray(self._values, np.float64) * 1e3
         return {
-            "count": int(v.size),
+            "count": int(self._count),
             "p50": float(np.percentile(v, 50)),
             "p99": float(np.percentile(v, 99)),
-            "mean": float(v.mean()),
-            "max": float(v.max()),
+            "mean": float(self._sum / self._count * 1e3),
+            "max": float(self._max * 1e3),
         }
 
 
@@ -62,6 +94,7 @@ COUNTERS = (
     "admitted",             # entered the queue
     "rejected_queue_full",  # admission: bounded queue at capacity
     "rejected_infeasible",  # admission: deadline < estimated exec time
+    "rejected_closed",      # admission: queue closed (graceful shutdown)
     "shed_expired",         # queued, then deadline became unmeetable
     "cancelled",            # caller-cancelled while queued
     "completed",            # future resolved with a result

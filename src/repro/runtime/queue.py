@@ -44,6 +44,10 @@ class DeadlineInfeasibleError(AdmissionError):
     pass
 
 
+class QueueClosedError(AdmissionError):
+    """The queue stopped accepting work (runtime shutting down)."""
+
+
 class DeadlineExceededError(RuntimeError):
     """A queued request shed because its deadline became unmeetable."""
 
@@ -216,6 +220,7 @@ class RequestQueue:
         self.lock = threading.RLock()
         self._groups: "Dict[object, List[Request]]" = {}
         self._seq = itertools.count()
+        self._closed = False
 
     # ------------------------------------------------------------------
 
@@ -231,6 +236,18 @@ class RequestQueue:
         """Live view: bucket -> queued requests, insertion-ordered."""
         return self._groups
 
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """Stop admissions: every later :meth:`submit` is rejected with
+        :class:`QueueClosedError`.  Already-queued requests are untouched
+        — a graceful shutdown closes the door first, then drains what is
+        inside.  Idempotent."""
+        with self.lock:
+            self._closed = True
+
     # ------------------------------------------------------------------
 
     def submit(self, request: Request) -> Request:
@@ -245,6 +262,10 @@ class RequestQueue:
         if request.bucket is None:
             raise ValueError("request must be prepared (bucket) before submit")
         with self.lock:
+            if self._closed:
+                return self._reject(
+                    request, QueueClosedError("queue is closed"),
+                    "rejected_closed")
             if self.capacity is not None and len(self) >= self.capacity:
                 return self._reject(
                     request, QueueFullError(

@@ -171,6 +171,7 @@ class MicroBatcher:
         self.calls = 0             # coalesced forward invocations
         self._executables: Dict[Tuple[Bucket, int], object] = {}
         self._bucket_plans: Dict[Tuple[Bucket, int], object] = {}
+        self._layer_plans: Dict[Tuple[Bucket, int], list] = {}
 
     def plan_for_bucket(self, bucket: Bucket, feature_dim: int):
         """The plan one ladder rung traces with.
@@ -214,6 +215,47 @@ class MicroBatcher:
             plan = choice.plan.resolve(schedulable=False)
             self._bucket_plans[key] = plan
         return plan
+
+    def layer_plans_for_bucket(self, bucket: Bucket, feature_dim: int):
+        """One plan per layer for one rung's coalesced forward.
+
+        With ``autoplan`` off every layer shares the single config-derived
+        plan (historical behaviour).  With it on, the rung's synthetic
+        stats go through the multi-layer pipeline planner
+        (``repro.exec.pipeline``), which picks impl/blocks per layer —
+        the hidden-width layers and the narrow output layer genuinely
+        want different tiles.  Layouts stay replicated here: the
+        coalesced forward traces bare arrays with no host-side row split;
+        bucket chunks shard at request granularity instead.  Cached per
+        (bucket, feature_dim), so the choice is made once and the
+        zero-recompile-after-warmup invariant is untouched.
+        """
+        if not self.autoplan:
+            return [self.plan] * self.cfg.n_layers
+        key = (bucket, feature_dim)
+        plans = self._layer_plans.get(key)
+        if plans is None:
+            from repro.exec.pipeline import plan_pipeline
+            from repro.plan import cost
+
+            stats = cost.synthetic_stats(
+                rows=bucket.rows,
+                n_out_rows=bucket.nodes,
+                n_dense_rows=bucket.nodes,
+                nnz=max(
+                    int(bucket.rows
+                        * (self.ladder.mean_row_nnz or self.cfg.tau / 2)), 1
+                ),
+                tau=self.cfg.tau,
+            )
+            pplan = plan_pipeline(
+                self.cfg, stats, interpret=self.interpret
+            )
+            plans = [
+                lp.spmm.resolve(schedulable=False) for lp in pplan.layers
+            ]
+            self._layer_plans[key] = plans
+        return plans
 
     # ------------------------------------------------------------------
     # Request preparation
@@ -270,7 +312,7 @@ class MicroBatcher:
 
     def _make_forward(self, bucket: Bucket, feature_dim: int):
         cfg = self.cfg
-        plan = self.plan_for_bucket(bucket, feature_dim)
+        layer_plans = self.layer_plans_for_bucket(bucket, feature_dim)
         nodes_b = bucket.nodes
         mesh = self.mesh
 
@@ -311,7 +353,7 @@ class MicroBatcher:
                     rmap_f,
                     xw,
                     n_out_rows=b * nodes_b,
-                    plan=plan,
+                    plan=layer_plans[i],
                 )
                 if i < cfg.n_layers - 1:
                     x = jax.nn.relu(x)

@@ -98,8 +98,13 @@ class ServeEngine:
             params if params is not None else init_params(cfg, jax.random.PRNGKey(0))
         )
         # Full-graph artifact: preprocessed once per content key, persisted.
+        # With autoplanning on, the full-graph step routes through the
+        # multi-layer pipeline planner (per-layer impl/blocks + activation
+        # layouts chosen jointly); the static config plan otherwise.
         self.graph = self.registry.get_or_build(adj_norm, cfg, persist=True)
-        self._full_step = self.registry.forward_step(adj_norm, cfg)
+        self._full_step = self.registry.forward_step(
+            adj_norm, cfg, plan="auto" if autoplan else None
+        )
         self.sampler = SubgraphSampler(
             adj_norm,
             cfg,

@@ -98,21 +98,38 @@ class ArtifactRegistry:
         return graph
 
     def forward_step(
-        self, adj: CSRMatrix, cfg: GCNConfig, persist: bool = True
+        self, adj: CSRMatrix, cfg: GCNConfig, persist: bool = True,
+        plan=None,
     ) -> Callable:
         """Jitted full-graph forward ``step(params, features) -> logits``
         bound to the registered preprocessed operand.
 
         Keyed on ``(graph_key, cfg)``: graph_key deliberately ignores
         forward-only fields (dims, spmm impl/blocks) so the *operand* is
-        shared, but the jitted step must not be."""
+        shared, but the jitted step must not be.  ``plan`` is forwarded to
+        :func:`gcn_forward` — ``"auto"`` plans the whole stack through
+        ``repro.exec.pipeline`` once at build time (host-side, so the
+        traced step carries the already-chosen per-layer plans); a plan
+        object keys the cache by identity.
+        """
         gkey = graph_key(adj, cfg)
-        key = (gkey, cfg)
+        key = (gkey, cfg,
+               plan if (plan is None or isinstance(plan, str)) else id(plan))
         fwd = self._forwards.get(key)
         if fwd is not None:
             return fwd
         graph = self.get_or_build(adj, cfg, persist=persist, key=gkey)
-        fwd = jax.jit(lambda params, feats: gcn_forward(params, graph, feats, cfg))
+        step_plan = plan
+        if plan == "auto":
+            # Plan once here, not per trace: the pipeline planner is pure
+            # host-side arithmetic over the preprocessed operand.
+            from repro.exec.pipeline import plan_pipeline
+
+            step_plan = plan_pipeline(cfg, graph.pre.ell)
+        fwd = jax.jit(
+            lambda params, feats: gcn_forward(
+                params, graph, feats, cfg, plan=step_plan)
+        )
         self._forwards[key] = fwd
         return fwd
 

@@ -377,6 +377,49 @@ def test_metrics_snapshot_schema_and_json(tmp_path):
     assert snap["derived"]["slo_attainment"] == 1.0
 
 
+def test_histogram_reservoir_is_bounded_and_exact_totals():
+    """Past ``max_samples`` the sample buffer stops growing (uniform
+    reservoir), while count/mean/max keep tracking every observation and
+    the summary schema is unchanged."""
+    from repro.runtime.metrics import Histogram
+
+    h = Histogram(max_samples=8)
+    for i in range(200):
+        h.observe(i * 1e-3)
+    assert h.count == 200
+    assert len(h._values) == 8
+    s = h.summary_ms()
+    assert set(s) == {"count", "p50", "p99", "mean", "max"}
+    assert s["count"] == 200
+    assert s["mean"] == pytest.approx(float(np.mean(np.arange(200))))
+    assert s["max"] == pytest.approx(199.0)
+    # percentiles come from the reservoir: within the observed range
+    assert 0.0 <= s["p50"] <= 199.0
+
+    # under the bound, percentiles stay assertion-exact
+    small = Histogram()
+    for v in (0.001, 0.002, 0.003):
+        small.observe(v)
+    assert small.summary_ms()["p50"] == pytest.approx(2.0)
+    assert small.summary_ms()["count"] == 3
+
+    with pytest.raises(ValueError):
+        Histogram(max_samples=0)
+
+
+def test_histogram_reservoir_deterministic():
+    """The replacement draw uses an internal LCG, not the global RNG —
+    two identical observation streams keep identical reservoirs."""
+    from repro.runtime.metrics import Histogram
+
+    a, b = Histogram(max_samples=4), Histogram(max_samples=4)
+    for i in range(100):
+        a.observe(float(i))
+        b.observe(float(i))
+    assert a._values == b._values
+    assert a.count == b.count == 100
+
+
 # ---------------------------------------------------------------------------
 # engine-level acceptance: facade identity + zero recompiles under async load
 # ---------------------------------------------------------------------------
@@ -519,6 +562,46 @@ def test_shutdown_cancels_still_queued_requests(toy_engine_parts):
     assert rt.metrics.count("cancelled") == 1
     assert rt.queue.depth == 0
     rt.shutdown()                      # still idempotent
+
+
+def test_graceful_drain_shutdown_flushes_queued_work(toy_engine_parts):
+    """``shutdown(drain=True)`` closes admissions, flushes everything
+    already queued through the scheduler, and resolves every future —
+    nothing is cancelled, later submits are rejected at the door."""
+    from repro.runtime.queue import QueueClosedError
+
+    engine = _toy_engine(toy_engine_parts)
+    engine.warmup()
+    rt = engine.runtime(capacity=None)  # loop never started
+    reqs = [rt.submit([i, i + 1]) for i in range(5)]
+    rt.shutdown(drain=True)
+    for r in reqs:
+        out = r.future.result(timeout=0)   # already resolved
+        assert out.shape == (2, engine.cfg.out_dim)
+    assert rt.metrics.count("completed") == len(reqs)
+    assert rt.metrics.count("cancelled") == 0
+    assert rt.queue.depth == 0
+
+    assert rt.queue.closed
+    with pytest.raises(QueueClosedError):
+        rt.submit([0])
+    assert rt.metrics.count("rejected_closed") == 1
+    rt.shutdown(drain=True)            # idempotent
+
+
+def test_graceful_drain_with_running_worker(toy_engine_parts):
+    """Draining while the worker thread is live must not double-execute:
+    batch membership is decided under the queue lock, so the drain and
+    the worker partition the queued requests."""
+    engine = _toy_engine(toy_engine_parts)
+    engine.warmup()
+    rt = engine.runtime(capacity=32).start()
+    reqs = [rt.submit([i]) for i in range(6)]
+    rt.shutdown(drain=True, timeout=10.0)
+    assert not rt.loop.running
+    for r in reqs:
+        assert r.future.result(timeout=5).shape == (1, engine.cfg.out_dim)
+    assert rt.metrics.count("completed") == len(reqs)
 
 
 def test_bench_queue_smoke(monkeypatch, capsys, tmp_path):
