@@ -16,6 +16,7 @@ from benchmarks import (  # noqa: E402
     bench_ablation,
     bench_area,
     bench_buffer_sizes,
+    bench_fleet,
     bench_flexible_k,
     bench_pipeline,
     bench_plan,
@@ -42,6 +43,7 @@ def main() -> None:
         ("Pipelined multi-layer forward (sharded activations)", bench_pipeline),
         ("Serving engine", bench_serve),
         ("Async queue (open-loop Poisson)", bench_queue),
+        ("Fleet (multi-tenant hot/cold isolation)", bench_fleet),
     ]:
         print(f"\n## {name}")
         t = time.time()

@@ -1,0 +1,58 @@
+"""repro.fleet — a multi-tenant servable fleet behind one runtime.
+
+Many graphs and many model kinds served by one deadline-aware queue /
+scheduler / worker loop: ``Servable`` abstracts the model kind
+(:class:`GcnServable` over the SpMM serving core, :class:`LmServable`
+over the arch registry), :class:`FleetManager` owns routing and hot
+load/unload under a residency budget, :class:`TenantTable` enforces
+per-tenant quotas and SLO classes at admission, and
+:class:`FleetRuntime` ties them to ``repro.runtime`` with per-servable
+batching geometry and weighted-fair batch ordering.
+"""
+
+from repro.fleet.loadgen import TenantLoad, run_open_loop_mix
+from repro.fleet.manager import (
+    FleetBucket,
+    FleetEstimator,
+    FleetManager,
+    FleetRuntime,
+    build_servable,
+    fleet_from_config,
+)
+from repro.fleet.servable import (
+    EwmaEstimator,
+    GcnServable,
+    LmPrepared,
+    LmServable,
+    SeqBucket,
+    Servable,
+)
+from repro.fleet.tenancy import (
+    InflightLimitError,
+    QuotaExceededError,
+    TenantAdmissionError,
+    TenantPolicy,
+    TenantTable,
+)
+
+__all__ = [
+    "Servable",
+    "GcnServable",
+    "LmServable",
+    "LmPrepared",
+    "SeqBucket",
+    "EwmaEstimator",
+    "FleetBucket",
+    "FleetEstimator",
+    "FleetManager",
+    "FleetRuntime",
+    "build_servable",
+    "fleet_from_config",
+    "TenantPolicy",
+    "TenantTable",
+    "TenantAdmissionError",
+    "QuotaExceededError",
+    "InflightLimitError",
+    "TenantLoad",
+    "run_open_loop_mix",
+]

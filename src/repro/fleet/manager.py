@@ -1,0 +1,374 @@
+"""Fleet manager + runtime: many servables behind one close loop.
+
+:class:`FleetManager` owns the servable registry and their residency: a
+registered servable is *known* (routable) but loads lazily on first
+traffic, into a weighted LRU bounded by ``capacity_units`` — the same
+:class:`~repro.serve.cache.LruDict` machinery the artifact registry
+uses.  Eviction calls the servable's ``unload`` (executables dropped,
+compile memory released); the next request hot-loads it again.
+
+:class:`FleetRuntime` is the multi-tenant analogue of
+:class:`~repro.runtime.loop.ServeRuntime`, built from the *same* queue /
+scheduler / loop — the fleet changes what flows through them, not how
+they work:
+
+* every request's grouping key is a :class:`FleetBucket` ``(servable,
+  inner bucket)``, so one queue and one scheduler handle heterogeneous
+  shapes without ever mixing servables in a batch;
+* :class:`FleetEstimator` dispatches cost queries to the owning
+  servable's estimator, and the scheduler's ``profile_for`` resolves
+  each servable's own batching geometry, so each servable's deadline
+  triggers are priced and chunked exactly as its solo runtime would;
+* a :class:`~repro.runtime.scheduler.WeightedFairPicker` orders each
+  poll's ready batches across servables so a hot servable with many
+  ready buckets cannot monopolize the worker;
+* tenant policy (:mod:`repro.fleet.tenancy`) is enforced at submit,
+  before queue admission, with per-tenant labeled metrics beside the
+  fleet-wide counters.
+
+With exactly one registered :class:`GcnServable` and no tenant limits,
+every decision collapses to the single-engine path: same grouping, same
+close times, same batch membership, same executables — bit-identical
+results to ``ServeRuntime``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.fleet.servable import Servable
+from repro.fleet.tenancy import (
+    InflightLimitError,
+    QuotaExceededError,
+    TenantPolicy,
+    TenantTable,
+)
+from repro.runtime.clock import Clock, RealClock
+from repro.runtime.loop import RuntimeLoop
+from repro.runtime.metrics import MetricsRegistry, labeled
+from repro.runtime.queue import Request, RequestQueue, UnknownServableError
+from repro.runtime.scheduler import (
+    BatchProfile,
+    BatchScheduler,
+    ClosedBatch,
+    WeightedFairPicker,
+)
+from repro.serve.cache import LruDict
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetBucket:
+    """Composite grouping key: a servable's own bucket, namespaced by the
+    servable — two servables' identical inner shapes stay separate
+    groups, so a batch never spans servables."""
+
+    servable: str
+    inner: object
+
+
+class FleetEstimator:
+    """Routes (bucket, batch) cost queries to the owning servable."""
+
+    def __init__(self, manager: "FleetManager"):
+        self.manager = manager
+
+    def estimate(self, bucket: FleetBucket, batch: int = 1) -> float:
+        return self.manager.servable(bucket.servable).estimator.estimate(
+            bucket.inner, batch)
+
+    def observe(self, bucket: FleetBucket, batch: int,
+                seconds: float) -> None:
+        self.manager.servable(bucket.servable).estimator.observe(
+            bucket.inner, batch, seconds)
+
+
+class FleetManager:
+    """Servable registry + residency budget (weighted LRU of loaded
+    servables)."""
+
+    def __init__(self, *, capacity_units: float = 8.0):
+        self._servables: Dict[str, Servable] = {}
+        self._loaded = LruDict(capacity_units, on_evict=self._evict)
+        self.loads = 0
+        self.unloads = 0
+
+    def register(self, servable: Servable) -> Servable:
+        if servable.key in self._servables:
+            raise ValueError(f"servable {servable.key!r} already registered")
+        self._servables[servable.key] = servable
+        return servable
+
+    def knows(self, key: str) -> bool:
+        return key in self._servables
+
+    def keys(self) -> List[str]:
+        return list(self._servables)
+
+    def servable(self, key: str) -> Servable:
+        """Registry lookup only — no load, no recency touch."""
+        sv = self._servables.get(key)
+        if sv is None:
+            raise UnknownServableError(
+                f"graph_key {key!r} matches no known servable")
+        return sv
+
+    def loaded(self, key: str) -> bool:
+        return key in self._loaded
+
+    def resolve(self, key: str) -> Servable:
+        """Route ``key`` to its servable, hot-loading under the budget.
+
+        A first touch (or a touch after eviction) calls ``load()`` —
+        warmup-compiling the servable's executable grid — and may evict
+        the least-recently-used resident servable(s) to stay within
+        ``capacity_units``.  A resident servable is just a recency touch.
+        """
+        sv = self.servable(key)
+        if key not in self._loaded:
+            sv.load()
+            self.loads += 1
+            self._loaded.put(key, sv, weight=sv.cost_units())
+        else:
+            self._loaded.get(key)      # touch recency
+        return sv
+
+    def profile(self, key: str) -> BatchProfile:
+        return self.servable(key).profile()
+
+    def _evict(self, key: str, sv: Servable) -> None:
+        sv.unload()
+        self.unloads += 1
+
+
+class FleetRuntime:
+    """Deadline-aware serving over a :class:`FleetManager` + tenants."""
+
+    def __init__(
+        self,
+        manager: FleetManager,
+        *,
+        tenants: Optional[TenantTable] = None,
+        capacity: Optional[int] = 256,
+        clock: Optional[Clock] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        max_wait_s: Optional[float] = 0.05,
+        close_margin_s: Optional[float] = None,
+        weights: Optional[Dict[str, float]] = None,
+    ):
+        self.manager = manager
+        self.tenants = tenants or TenantTable()
+        self.clock = clock or RealClock()
+        self.metrics = metrics or MetricsRegistry()
+        self.estimator = FleetEstimator(manager)
+        self.queue = RequestQueue(
+            capacity=capacity,
+            clock=self.clock,
+            estimator=self.estimator,
+            metrics=self.metrics,
+            key_check=manager.knows,
+        )
+        if close_margin_s is None:
+            close_margin_s = 0.0 if getattr(self.clock, "manual", False) \
+                else 0.005
+        # max_batch/batch_sizes are placeholders here: every bucket is a
+        # FleetBucket and profile_for overrides both per servable.
+        self.scheduler = BatchScheduler(
+            self.queue,
+            max_batch=8,
+            max_wait_s=max_wait_s,
+            close_margin_s=close_margin_s,
+            profile_for=lambda fb: manager.profile(fb.servable),
+            picker=WeightedFairPicker(
+                flow_of=lambda b: b.bucket.servable, weights=weights),
+        )
+        self.loop = RuntimeLoop(self.scheduler, self._run_batch,
+                                name="repro-fleet")
+
+    # ------------------------------------------------------------------
+
+    def _run_batch(self, batch: ClosedBatch) -> List:
+        sv = self.manager.resolve(batch.bucket.servable)
+        return sv.run_batch([r.padded for r in batch.requests])
+
+    def submit(
+        self,
+        servable: str,
+        payload: Sequence[int],
+        *,
+        tenant: Optional[str] = None,
+        deadline_s: Optional[float] = None,
+        deadline: Optional[float] = None,
+        priority: Optional[int] = None,
+    ) -> Request:
+        """Admit one request for ``servable`` under ``tenant``'s policy.
+
+        ``priority``/``deadline`` default from the tenant's policy (its
+        SLO class); explicit arguments override per request.  Raises an
+        ``AdmissionError`` subclass on any rejection — unknown servable,
+        tenant quota/inflight, queue full, infeasible deadline — and the
+        same exception lands on the returned-future path, so both call
+        shapes observe one verdict.
+        """
+        if deadline_s is not None and deadline is not None:
+            raise ValueError("pass deadline_s (relative) or deadline "
+                             "(absolute), not both")
+        t0 = self.clock.now()
+        if not self.manager.knows(servable):
+            # Short-circuit before prepare(): there is no servable to
+            # prepare against.  queue.submit() normally counts
+            # "submitted"; this path never reaches it, so count here to
+            # keep shed_rate's denominator honest.
+            self.metrics.inc("submitted")
+            self.metrics.inc("rejected_unknown_servable")
+            if tenant is not None:
+                self.metrics.inc(labeled(
+                    "rejected_unknown_servable", tenant=tenant))
+            raise UnknownServableError(
+                f"graph_key {servable!r} matches no known servable")
+        pol = self.tenants.policy(tenant)
+        if priority is None:
+            priority = pol.priority
+        if deadline_s is None and deadline is None:
+            deadline_s = pol.deadline_s
+        try:
+            self.tenants.acquire(tenant, t0)
+        except (QuotaExceededError, InflightLimitError) as e:
+            counter = ("rejected_quota" if isinstance(e, QuotaExceededError)
+                       else "rejected_inflight")
+            self.metrics.inc("submitted")
+            self.metrics.inc(counter)
+            if tenant is not None:
+                self.metrics.inc(labeled(counter, tenant=tenant))
+            raise
+        sv = self.manager.resolve(servable)
+        prepared = sv.prepare(payload)
+        req = Request(
+            graph_key=servable,
+            seeds=tuple(int(x) for x in payload),
+            deadline=(t0 + deadline_s if deadline_s is not None
+                      else deadline),
+            priority=priority,
+            tenant=tenant,
+            bucket=FleetBucket(servable, prepared.bucket),
+            padded=prepared,
+            prep_s=self.clock.now() - t0,
+        )
+        # The inflight slot returns when the future resolves by ANY path
+        # — result, failure, shed, cancel — which is exactly the set of
+        # events that fire done callbacks.
+        req.future.add_done_callback(
+            lambda _f, t=tenant: self.tenants.release(t))
+        self.queue.submit(req)
+        self.loop.notify()
+        return req
+
+    def cancel(self, request: Request) -> bool:
+        ok = self.queue.cancel(request)
+        if ok:
+            self.loop.notify()
+        return ok
+
+    # ------------------------------------------------------------------
+
+    def start(self) -> "FleetRuntime":
+        self.loop.start()
+        return self
+
+    def drain(self) -> int:
+        if self.loop.running:
+            raise RuntimeError(
+                "drain() is for the non-threaded mode; with the worker "
+                "running, wait on the request futures instead")
+        return self.loop.drain()
+
+    def shutdown(self, timeout: Optional[float] = 5.0,
+                 drain: bool = False) -> None:
+        self.queue.close()
+        if drain:
+            self.loop.drain()
+        self.loop.shutdown(timeout)
+        with self.queue.lock:
+            leftovers = [
+                r for group in self.queue.groups().values() for r in group
+            ]
+            for r in leftovers:
+                self.queue.cancel(r)
+
+    def __enter__(self) -> "FleetRuntime":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Config-driven construction (launch --fleet-config)
+# ---------------------------------------------------------------------------
+
+
+def build_servable(spec: dict) -> Servable:
+    """One servable from a config dict: ``kind`` selects the wrapper.
+
+    ``gcn``: ``{"kind": "gcn", "key": ..., "dataset": ..., "hidden_dim":
+    ..., "spmm_impl": ..., "max_batch": ..., "fanout": ..., "cost": ...}``
+    — dataset names resolve through ``repro.graphs.load_dataset``.
+    ``lm``: ``{"kind": "lm", "key": ..., "arch": ..., "seq_buckets":
+    [...], "max_batch": ..., "cost": ...}`` — archs resolve through
+    ``configs.registry`` (reduced smoke-size by default).
+    """
+    from repro.fleet.servable import GcnServable, LmServable
+
+    kind = spec.get("kind")
+    if kind == "gcn":
+        from repro.serve.engine import ServeEngine
+
+        engine_kw = {
+            k: spec[k]
+            for k in ("hidden_dim", "spmm_impl", "max_batch", "max_seeds",
+                      "fanout", "hops", "base_bucket_nodes")
+            if k in spec
+        }
+        engine = ServeEngine.from_dataset(spec["dataset"], **engine_kw)
+        return GcnServable(engine, key=spec.get("key"),
+                           cost=spec.get("cost"))
+    if kind == "lm":
+        lm_kw = {
+            k: spec[k]
+            for k in ("seq_buckets", "max_batch", "seed", "full_size")
+            if k in spec
+        }
+        return LmServable(spec["arch"], key=spec.get("key"),
+                          cost=spec.get("cost"), **lm_kw)
+    raise ValueError(f"unknown servable kind {kind!r}")
+
+
+def fleet_from_config(
+    config: dict,
+    *,
+    clock: Optional[Clock] = None,
+    metrics: Optional[MetricsRegistry] = None,
+) -> FleetRuntime:
+    """A runnable fleet from the ``--fleet-config`` JSON schema.
+
+    ``{"servables": [spec, ...], "capacity_units": 8.0, "tenants":
+    [{"name": ..., "priority": ..., "qps": ..., "burst": ...,
+    "max_inflight": ..., "deadline_s": ...}, ...], "weights": {key:
+    w, ...}, "queue_capacity": 256, "max_wait_s": 0.05}`` — every
+    section optional except ``servables``.
+    """
+    manager = FleetManager(
+        capacity_units=float(config.get("capacity_units", 8.0)))
+    for spec in config["servables"]:
+        manager.register(build_servable(spec))
+    tenants = TenantTable(
+        policies=[TenantPolicy(**t) for t in config.get("tenants", [])])
+    return FleetRuntime(
+        manager,
+        tenants=tenants,
+        capacity=config.get("queue_capacity", 256),
+        clock=clock,
+        metrics=metrics,
+        max_wait_s=config.get("max_wait_s", 0.05),
+        weights=config.get("weights"),
+    )

@@ -1,0 +1,324 @@
+"""Servables: the unit a fleet loads, routes to, batches, and unloads.
+
+A :class:`Servable` is everything the shared runtime needs to serve one
+model behind a key, with the model kind abstracted away:
+
+* ``prepare(payload)`` turns one request payload into a shape-bucketed
+  prepared operand (the object carries ``.bucket``, the grouping key the
+  queue and scheduler batch on);
+* ``run_batch(prepared)`` executes one single-bucket batch through the
+  servable's own warmed executables and returns one output per request;
+* ``profile()`` exposes the servable's batching geometry
+  (:class:`~repro.runtime.scheduler.BatchProfile`) so the one shared
+  close loop applies *this* servable's coalescing width and padded
+  ladder to *this* servable's buckets;
+* ``estimator`` prices a (bucket, padded batch) in seconds for admission
+  feasibility and deadline-trigger placement;
+* ``load()``/``unload()`` bound resident compile memory: the fleet
+  manager hot-loads on first traffic and unloads on LRU eviction.
+
+Two implementations prove the abstraction spans model kinds:
+:class:`GcnServable` (the FlexVector SpMM serving core — sampler +
+micro-batcher + AOT bucket executables) and :class:`LmServable` (a
+decoder LM from ``configs.registry``, bucketed by sequence length).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.runtime.queue import BucketEstimator
+from repro.runtime.scheduler import BatchProfile
+
+
+class Servable:
+    """Interface contract (documented above); subclasses override all."""
+
+    key: str
+
+    def load(self) -> None:
+        """Warm executables; idempotent.  Called by the manager on
+        hot-load, never by the runtime mid-request."""
+        raise NotImplementedError
+
+    def unload(self) -> None:
+        """Drop executables (resident memory back to near zero);
+        ``load`` afterwards must restore service."""
+        raise NotImplementedError
+
+    @property
+    def estimator(self):
+        raise NotImplementedError
+
+    def profile(self) -> BatchProfile:
+        raise NotImplementedError
+
+    def cost_units(self) -> float:
+        """Relative residency weight against the manager's capacity
+        budget (1.0 = one budget unit)."""
+        return 1.0
+
+    def prepare(self, payload):
+        raise NotImplementedError
+
+    def run_batch(self, prepared: List) -> List[np.ndarray]:
+        raise NotImplementedError
+
+
+class EwmaEstimator:
+    """Generic (bucket, batch) cost estimator: a caller-supplied model
+    function prices cold keys deterministically, and measured executions
+    fold into a per-key EWMA — the same convergence contract as
+    :class:`~repro.runtime.queue.BucketEstimator` without assuming the
+    GCN cost model."""
+
+    def __init__(self, model_fn, *, ewma: float = 0.3):
+        self.model_fn = model_fn
+        self.ewma = float(ewma)
+        self._measured: Dict[Tuple[object, int], float] = {}
+
+    def estimate(self, bucket, batch: int = 1) -> float:
+        key = (bucket, int(batch))
+        if key in self._measured:
+            return self._measured[key]
+        return float(self.model_fn(bucket, int(batch)))
+
+    def observe(self, bucket, batch: int, seconds: float) -> None:
+        key = (bucket, int(batch))
+        prev = self._measured.get(key)
+        self._measured[key] = (
+            float(seconds) if prev is None
+            else (1 - self.ewma) * prev + self.ewma * float(seconds)
+        )
+
+
+# ---------------------------------------------------------------------------
+# GCN
+# ---------------------------------------------------------------------------
+
+
+class GcnServable(Servable):
+    """One :class:`~repro.serve.engine.ServeEngine` behind a fleet key.
+
+    Everything routes through the engine's existing machinery — sampler
+    extraction in ``prepare``, the micro-batcher's coalesced AOT
+    executables in ``run_batch`` — so a fleet holding exactly one
+    GcnServable computes bit-identical results to ``ServeRuntime`` over
+    the same engine (same padding, same executables, same batch
+    membership)."""
+
+    def __init__(
+        self,
+        engine,
+        *,
+        key: Optional[str] = None,
+        calibration: float = 1.0,
+        cost: Optional[float] = None,
+    ):
+        self.engine = engine
+        self.key = key or engine.graph_key
+        self._estimator = BucketEstimator(
+            engine.cfg, engine.batcher.ladder, calibration=calibration)
+        self._cost = cost
+
+    def load(self) -> None:
+        self.engine.warmup()
+
+    def unload(self) -> None:
+        self.engine.batcher.clear_executables()
+
+    @property
+    def estimator(self) -> BucketEstimator:
+        return self._estimator
+
+    def profile(self) -> BatchProfile:
+        return BatchProfile(
+            self.engine.batcher.max_batch,
+            tuple(self.engine.batcher.batch_ladder()),
+        )
+
+    def cost_units(self) -> float:
+        if self._cost is not None:
+            return self._cost
+        # Graph residency dominates a GCN servable's footprint; scale by
+        # node count so one huge graph spends more of the budget than
+        # several small ones.
+        return max(self.engine.graph.n_nodes / 65536.0, 1.0)
+
+    def prepare(self, payload: Sequence[int]):
+        return self.engine._prepare(payload)
+
+    def run_batch(self, prepared: List) -> List[np.ndarray]:
+        return self.engine.batcher.run(self.engine.params, prepared)
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class SeqBucket:
+    """LM shape bucket: padded sequence length."""
+
+    seq: int
+
+
+@dataclasses.dataclass
+class LmPrepared:
+    """One token sequence padded to its sequence bucket."""
+
+    bucket: SeqBucket
+    tokens: np.ndarray        # (seq,) int32, zero padding
+    n_tokens: int
+
+
+class LmServable(Servable):
+    """A decoder LM from the arch registry, served by sequence bucket.
+
+    Payloads are token-id sequences; the answer is the logits at the last
+    *real* position (the next-token distribution — the LM serving unit of
+    work).  Sequences pad to a small ladder of lengths and batches pad to
+    a power-of-two ladder, so the compiled shape set is ``seq_buckets ×
+    batch ladder``, fully warmable exactly like the GCN bucket grid.
+    Padding is causal-safe: positions past ``n_tokens`` are zero tokens
+    the causal mask keeps out of every real position's context, and the
+    read-out row never moves.
+    """
+
+    def __init__(
+        self,
+        arch: str,
+        *,
+        key: Optional[str] = None,
+        seq_buckets: Sequence[int] = (16, 32, 64),
+        max_batch: int = 8,
+        seed: int = 0,
+        full_size: bool = False,
+        cost: Optional[float] = None,
+        base_seconds: float = 2e-4,
+    ):
+        import jax
+
+        from repro.configs.registry import get_config, reduced
+        from repro.models.lm import init_lm
+
+        cfg = get_config(arch)
+        if not full_size:
+            cfg = reduced(cfg)
+        if cfg.frontend_tokens:
+            raise ValueError(
+                f"arch {arch!r} needs frontend memory embeddings; "
+                f"text-only servables cannot serve it")
+        self.arch = arch
+        self.key = key or f"lm_{cfg.name}"
+        self.cfg = cfg
+        self.seq_buckets = tuple(sorted(int(s) for s in seq_buckets))
+        self.max_batch = int(max_batch)
+        self.params = init_lm(cfg, jax.random.PRNGKey(seed))
+        self._cost = cost
+        self.compiles = 0
+        self.calls = 0
+        self._executables: Dict[Tuple[SeqBucket, int], object] = {}
+        # Cold estimate: one transformer forward is ~linear in tokens
+        # processed (batch × seq) at smoke scale; real executions fold in
+        # through the EWMA immediately.
+        self._estimator = EwmaEstimator(
+            lambda bucket, batch: base_seconds * batch * bucket.seq)
+
+    # -- batching geometry ------------------------------------------------
+
+    def batch_ladder(self) -> List[int]:
+        sizes = [1]
+        while sizes[-1] < self.max_batch:
+            sizes.append(min(sizes[-1] * 2, self.max_batch))
+        return sizes
+
+    def pad_batch(self, n: int) -> int:
+        for b in self.batch_ladder():
+            if b >= n:
+                return b
+        raise ValueError(f"batch {n} exceeds max_batch {self.max_batch}")
+
+    def profile(self) -> BatchProfile:
+        return BatchProfile(self.max_batch, tuple(self.batch_ladder()))
+
+    @property
+    def estimator(self) -> EwmaEstimator:
+        return self._estimator
+
+    def cost_units(self) -> float:
+        if self._cost is not None:
+            return self._cost
+        return 1.0
+
+    # -- lifecycle --------------------------------------------------------
+
+    def _executable(self, bucket: SeqBucket, batch: int):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models.lm import forward
+
+        key = (bucket, batch)
+        exe = self._executables.get(key)
+        if exe is None:
+            p_avals = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(
+                    jnp.shape(x), jnp.asarray(x).dtype),
+                self.params)
+            tok_aval = jax.ShapeDtypeStruct((batch, bucket.seq), jnp.int32)
+            fwd = jax.jit(lambda params, tokens: forward(
+                params, self.cfg, tokens))
+            exe = fwd.lower(p_avals, tok_aval).compile()
+            self.compiles += 1
+            self._executables[key] = exe
+        return exe
+
+    def load(self) -> None:
+        for seq in self.seq_buckets:
+            for b in self.batch_ladder():
+                self._executable(SeqBucket(seq), b)
+
+    def unload(self) -> None:
+        self._executables.clear()
+
+    # -- serving ----------------------------------------------------------
+
+    def prepare(self, payload: Sequence[int]) -> LmPrepared:
+        tokens = np.asarray(list(payload), dtype=np.int32)
+        if tokens.ndim != 1 or tokens.size == 0:
+            raise ValueError("LM payload must be a non-empty 1-D token "
+                             "sequence")
+        if np.any(tokens < 0) or np.any(tokens >= self.cfg.vocab):
+            raise ValueError(
+                f"token ids must be in [0, {self.cfg.vocab})")
+        for seq in self.seq_buckets:
+            if seq >= tokens.size:
+                break
+        else:
+            raise ValueError(
+                f"sequence length {tokens.size} exceeds the top bucket "
+                f"{self.seq_buckets[-1]}")
+        padded = np.zeros((seq,), dtype=np.int32)
+        padded[: tokens.size] = tokens
+        return LmPrepared(
+            bucket=SeqBucket(seq), tokens=padded, n_tokens=int(tokens.size))
+
+    def run_batch(self, prepared: List[LmPrepared]) -> List[np.ndarray]:
+        if not prepared:
+            return []
+        bucket = prepared[0].bucket
+        if any(p.bucket != bucket for p in prepared):
+            raise ValueError("run_batch() requires a single-bucket batch")
+        batch = self.pad_batch(len(prepared))
+        toks = np.zeros((batch, bucket.seq), dtype=np.int32)
+        for i, p in enumerate(prepared):
+            toks[i] = p.tokens
+        exe = self._executable(bucket, batch)
+        out = np.asarray(exe(self.params, toks))    # (batch, seq, vocab)
+        self.calls += 1
+        return [out[i, p.n_tokens - 1] for i, p in enumerate(prepared)]

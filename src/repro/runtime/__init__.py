@@ -12,7 +12,7 @@ under test.
 from repro.runtime.clock import Clock, RealClock, VirtualClock
 from repro.runtime.loadgen import run_open_loop
 from repro.runtime.loop import RuntimeLoop, ServeRuntime
-from repro.runtime.metrics import Histogram, MetricsRegistry
+from repro.runtime.metrics import Histogram, MetricsRegistry, labeled
 from repro.runtime.queue import (
     AdmissionError,
     BucketEstimator,
@@ -22,8 +22,14 @@ from repro.runtime.queue import (
     QueueFullError,
     Request,
     RequestQueue,
+    UnknownServableError,
 )
-from repro.runtime.scheduler import BatchScheduler, ClosedBatch
+from repro.runtime.scheduler import (
+    BatchProfile,
+    BatchScheduler,
+    ClosedBatch,
+    WeightedFairPicker,
+)
 
 __all__ = [
     "Clock",
@@ -31,16 +37,20 @@ __all__ = [
     "VirtualClock",
     "Histogram",
     "MetricsRegistry",
+    "labeled",
     "AdmissionError",
     "QueueFullError",
     "DeadlineInfeasibleError",
     "DeadlineExceededError",
+    "UnknownServableError",
     "Request",
     "RequestQueue",
     "BucketEstimator",
     "FixedEstimator",
+    "BatchProfile",
     "BatchScheduler",
     "ClosedBatch",
+    "WeightedFairPicker",
     "RuntimeLoop",
     "ServeRuntime",
     "run_open_loop",

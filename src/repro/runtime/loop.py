@@ -33,11 +33,12 @@ from concurrent.futures import InvalidStateError
 from typing import Callable, List, Optional, Sequence
 
 from repro.runtime.clock import Clock, RealClock
-from repro.runtime.metrics import MetricsRegistry
+from repro.runtime.metrics import MetricsRegistry, labeled
 from repro.runtime.queue import (
     BucketEstimator,
     Request,
     RequestQueue,
+    UnknownServableError,
 )
 from repro.runtime.scheduler import BatchScheduler, ClosedBatch
 
@@ -105,6 +106,9 @@ class RuntimeLoop:
                         r.future.set_exception(e)
                     except InvalidStateError:
                         continue     # caller cancelled between check and set
+                if r.tenant is not None:
+                    self.metrics.inc(labeled("failed", tenant=r.tenant,
+                                             servable=r.graph_key))
             self.metrics.inc("failed", len(live))
             return
         if len(outputs) != len(batch.requests):
@@ -123,7 +127,9 @@ class RuntimeLoop:
         t1 = self.clock.now()
         if self.scheduler.estimator is not None:
             self.scheduler.estimator.observe(
-                batch.bucket, self.scheduler.padded_width(len(batch.requests)),
+                batch.bucket,
+                self.scheduler.padded_width(len(batch.requests),
+                                            batch.bucket),
                 t1 - t0)
         for r, out in zip(batch.requests, outputs):
             if r.future.cancelled() or r.future.done():
@@ -140,9 +146,21 @@ class RuntimeLoop:
             self.metrics.observe("exec_s", r.exec_s)
             self.metrics.observe("e2e_s", r.prep_s + (t1 - r.arrival))
             if r.deadline is not None:
-                self.metrics.inc(
-                    "slo_met" if t1 <= r.deadline else "slo_missed")
+                verdict = "slo_met" if t1 <= r.deadline else "slo_missed"
+                self.metrics.inc(verdict)
+                if r.tenant is not None:
+                    self.metrics.inc(labeled(verdict, tenant=r.tenant))
             self.metrics.inc("completed")
+            if r.tenant is not None:
+                # Multi-tenant traffic carries per-tenant / per-servable
+                # series beside the fleet-wide ones, same registry.
+                self.metrics.inc(labeled("completed", tenant=r.tenant,
+                                         servable=r.graph_key))
+                self.metrics.observe(
+                    labeled("e2e_s", tenant=r.tenant),
+                    r.prep_s + (t1 - r.arrival))
+                self.metrics.observe(
+                    labeled("exec_s", servable=r.graph_key), r.exec_s)
 
     # ------------------------------------------------------------------
 
@@ -170,8 +188,19 @@ class RuntimeLoop:
                         # not by waiting; re-poll on every notification.
                         self._cond.wait(_IDLE_WAIT_S)
                     else:
+                        targeted = next_close - now <= _IDLE_WAIT_S * 20
                         self._cond.wait(
                             min(next_close - now, _IDLE_WAIT_S * 20))
+                        woke = self.clock.now()
+                        if targeted and woke >= next_close:
+                            # The wait aimed at this close trigger and
+                            # landed past it: that overshoot is exactly
+                            # the scheduling jitter the adaptive close
+                            # margin must absorb next time.
+                            observe = getattr(self.scheduler,
+                                              "observe_wakeup", None)
+                            if observe is not None:
+                                observe(woke - next_close)
                 if self._stop:
                     return
             try:
@@ -246,6 +275,7 @@ class ServeRuntime:
             clock=self.clock,
             estimator=self.estimator,
             metrics=self.metrics,
+            key_check=lambda key: key == self.graph_key,
         )
         if close_margin_s is None:
             # Real clocks carry worker wake-up jitter; manually-driven
@@ -275,16 +305,22 @@ class ServeRuntime:
         deadline_s: Optional[float] = None,
         deadline: Optional[float] = None,
         priority: int = 0,
+        graph_key: Optional[str] = None,
     ) -> Request:
         """Admit one seed query; returns the request (``.future`` resolves
-        to its seed logits).  Raises ``AdmissionError`` on rejection."""
+        to its seed logits).  Raises ``AdmissionError`` on rejection.
+
+        ``graph_key`` defaults to this engine's graph; passing any other
+        key is rejected at admission with ``UnknownServableError`` — a
+        mismatched key used to enqueue anyway and silently answer from
+        the wrong graph."""
         if deadline_s is not None and deadline is not None:
             raise ValueError("pass deadline_s (relative) or deadline "
                              "(absolute), not both")
         t0 = self.clock.now()
         padded = self.engine._prepare(seeds)
         req = Request(
-            graph_key=self.graph_key,
+            graph_key=graph_key if graph_key is not None else self.graph_key,
             seeds=tuple(int(s) for s in seeds),
             deadline=(t0 + deadline_s if deadline_s is not None else deadline),
             priority=priority,

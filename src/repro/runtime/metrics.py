@@ -12,6 +12,7 @@ so dashboards and benchmarks consume the same object the tests assert on.
 from __future__ import annotations
 
 import json
+import os
 import threading
 from typing import Dict, List, Optional
 
@@ -95,6 +96,9 @@ COUNTERS = (
     "rejected_queue_full",  # admission: bounded queue at capacity
     "rejected_infeasible",  # admission: deadline < estimated exec time
     "rejected_closed",      # admission: queue closed (graceful shutdown)
+    "rejected_unknown_servable",  # admission: graph_key routes nowhere
+    "rejected_quota",       # admission: tenant token-bucket quota exhausted
+    "rejected_inflight",    # admission: tenant concurrent-inflight cap hit
     "shed_expired",         # queued, then deadline became unmeetable
     "cancelled",            # caller-cancelled while queued
     "completed",            # future resolved with a result
@@ -104,6 +108,36 @@ COUNTERS = (
     "batches_flush",        # close reason: explicit flush/drain
     "slo_met",              # completed with deadline, on time
     "slo_missed",           # completed with deadline, late
+)
+
+
+def labeled(name: str, **labels: str) -> str:
+    """Metric key with attached labels, Prometheus-style.
+
+    ``labeled("completed", tenant="cold", servable="cora")`` ->
+    ``completed{servable=cora,tenant=cold}``.  Labels are sorted so the
+    same (name, labels) always maps to the same key regardless of call
+    site; labeled keys live beside the plain counters/histograms in the
+    same registry and snapshot, so per-tenant/per-servable series need no
+    second schema.  ``None``-valued labels are dropped, which lets call
+    sites pass optional dimensions unconditionally.
+    """
+    kept = {k: v for k, v in labels.items() if v is not None}
+    if not kept:
+        return name
+    inner = ",".join(f"{k}={kept[k]}" for k in sorted(kept))
+    return f"{name}{{{inner}}}"
+
+
+#: The counters that mean "offered but never produced a result" — the
+#: numerator of ``shed_rate`` in both the property and the snapshot.
+_SHED_COUNTERS = (
+    "rejected_queue_full",
+    "rejected_infeasible",
+    "rejected_unknown_servable",
+    "rejected_quota",
+    "rejected_inflight",
+    "shed_expired",
 )
 
 
@@ -150,8 +184,7 @@ class MetricsRegistry:
         admission rejections plus queued-then-expired sheds."""
         with self._lock:
             c = self._counters
-            shed = (c["rejected_queue_full"] + c["rejected_infeasible"]
-                    + c["shed_expired"])
+            shed = sum(c[k] for k in _SHED_COUNTERS)
             return shed / max(c["submitted"], 1)
 
     @property
@@ -167,8 +200,7 @@ class MetricsRegistry:
             counters = dict(self._counters)
             gauges = dict(self._gauges)
             hists = {k: h.summary_ms() for k, h in self._hists.items()}
-        shed = (counters["rejected_queue_full"]
-                + counters["rejected_infeasible"] + counters["shed_expired"])
+        shed = sum(counters[k] for k in _SHED_COUNTERS)
         judged = counters["slo_met"] + counters["slo_missed"]
         return {
             "counters": counters,
@@ -182,6 +214,9 @@ class MetricsRegistry:
 
     def write_json(self, path: str, indent: Optional[int] = 2) -> dict:
         snap = self.snapshot()
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
         with open(path, "w") as f:
             json.dump(snap, f, indent=indent)
         return snap

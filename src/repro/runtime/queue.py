@@ -26,10 +26,10 @@ import itertools
 import math
 import threading
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.runtime.clock import Clock, RealClock
-from repro.runtime.metrics import MetricsRegistry
+from repro.runtime.metrics import MetricsRegistry, labeled
 
 
 class AdmissionError(RuntimeError):
@@ -46,6 +46,16 @@ class DeadlineInfeasibleError(AdmissionError):
 
 class QueueClosedError(AdmissionError):
     """The queue stopped accepting work (runtime shutting down)."""
+
+
+class UnknownServableError(AdmissionError):
+    """``Request.graph_key`` routes to no loaded/known servable.
+
+    Raised at admission: a request naming an unknown graph used to
+    enqueue anyway and run against whatever graph the engine held — a
+    silently *wrong answer*.  Rejecting at the door turns it into a
+    loud, immediate verdict at both the submit site and the future.
+    """
 
 
 class DeadlineExceededError(RuntimeError):
@@ -68,6 +78,11 @@ class Request:
     seeds: Tuple[int, ...]
     deadline: Optional[float] = None
     priority: int = 0
+    # Fleet routing metadata: the tenant the request bills against (None
+    # outside multi-tenant serving).  Carried on the request so the loop
+    # and scheduler can label completion/shed metrics per tenant without
+    # any back-pointer to the tenancy table.
+    tenant: Optional[str] = None
 
     # Filled at admission (the engine prepares/pads before submitting).
     bucket: object = None
@@ -206,6 +221,7 @@ class RequestQueue:
         clock: Optional[Clock] = None,
         estimator=None,
         metrics: Optional[MetricsRegistry] = None,
+        key_check: Optional[Callable[[str], bool]] = None,
     ):
         if capacity is not None and capacity < 1:
             raise ValueError(f"capacity must be >= 1 or None, got {capacity}")
@@ -213,6 +229,12 @@ class RequestQueue:
         self.clock = clock or RealClock()
         self.estimator = estimator
         self.metrics = metrics or MetricsRegistry()
+        # Admission-time routing validation: ``key_check(graph_key)`` must
+        # return True for the request to enter the queue.  The single-
+        # engine runtime passes "is this my graph"; the fleet passes "is
+        # this a registered servable".  None (the default) keeps the
+        # historical accept-anything behavior for bare queues.
+        self.key_check = key_check
         # Submissions land from caller threads while the worker loop polls
         # and removes; every structural access goes through this lock (an
         # RLock: the scheduler holds it across poll() while calling back
@@ -266,6 +288,13 @@ class RequestQueue:
                 return self._reject(
                     request, QueueClosedError("queue is closed"),
                     "rejected_closed")
+            if self.key_check is not None and \
+                    not self.key_check(request.graph_key):
+                return self._reject(
+                    request, UnknownServableError(
+                        f"graph_key {request.graph_key!r} matches no "
+                        f"known servable"),
+                    "rejected_unknown_servable")
             if self.capacity is not None and len(self) >= self.capacity:
                 return self._reject(
                     request, QueueFullError(
@@ -291,6 +320,8 @@ class RequestQueue:
     def _reject(self, request: Request, exc: AdmissionError,
                 counter: str) -> Request:
         self.metrics.inc(counter)
+        if request.tenant is not None:
+            self.metrics.inc(labeled(counter, tenant=request.tenant))
         request.future.set_exception(exc)
         raise exc
 

@@ -31,10 +31,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.runtime.clock import Clock
-from repro.runtime.metrics import MetricsRegistry
+from repro.runtime.metrics import MetricsRegistry, labeled
 from repro.runtime.queue import DeadlineExceededError, Request, RequestQueue
 
 
@@ -48,11 +48,86 @@ class ClosedBatch:
     reason: str              # "full" | "deadline" | "flush"
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchProfile:
+    """Per-bucket batching limits: the coalescing width and the padded
+    executable ladder a bucket's group closes against.  The single-engine
+    runtime has one profile for every bucket; a fleet resolves one per
+    servable, so every servable's own micro-batcher geometry governs its
+    buckets inside the one shared close loop."""
+
+    max_batch: int
+    batch_sizes: Tuple[int, ...]
+
+
 def _pad_batch(sizes: Sequence[int], n: int) -> int:
     for b in sizes:
         if b >= n:
             return b
     return sizes[-1]
+
+
+class WeightedFairPicker:
+    """Deterministic stride scheduling over ready batches.
+
+    When one poll closes batches from several flows (servables, in the
+    fleet), the order they are handed to the worker is the order they
+    execute — first-seen bucket order would let a hot flow with many
+    ready buckets delay a cold flow's single batch every round.  Stride
+    scheduling fixes that: each flow carries a *pass* value advanced by
+    ``1/weight`` per batch picked, and the picker always takes the
+    lowest-pass flow next, so over time flows execute in proportion to
+    their weights regardless of how many buckets each keeps ready.
+
+    Deterministic: pass state is explicit, ties break by position in the
+    closed list (itself deterministic), and a flow first seen mid-run
+    starts at the current virtual time instead of zero so it cannot
+    monopolize the worker to "catch up".
+    """
+
+    def __init__(
+        self,
+        flow_of: Callable[[ClosedBatch], object],
+        weights: Optional[Dict[object, float]] = None,
+        default_weight: float = 1.0,
+    ):
+        self.flow_of = flow_of
+        self.weights = dict(weights or {})
+        self.default_weight = float(default_weight)
+        self._pass: Dict[object, float] = {}
+        self._vt = 0.0
+
+    def weight(self, flow) -> float:
+        w = float(self.weights.get(flow, self.default_weight))
+        if w <= 0:
+            raise ValueError(f"flow {flow!r} has non-positive weight {w}")
+        return w
+
+    def _pass_of(self, flow) -> float:
+        if flow not in self._pass:
+            self._pass[flow] = self._vt
+        return self._pass[flow]
+
+    def order(self, batches: List[ClosedBatch]) -> List[ClosedBatch]:
+        if len(batches) < 2:
+            for b in batches:           # singleton batches still advance
+                self._advance(self.flow_of(b))
+            return batches
+        remaining = list(batches)
+        out: List[ClosedBatch] = []
+        while remaining:
+            i = min(range(len(remaining)),
+                    key=lambda j: (self._pass_of(self.flow_of(remaining[j])),
+                                   j))
+            batch = remaining.pop(i)
+            self._advance(self.flow_of(batch))
+            out.append(batch)
+        return out
+
+    def _advance(self, flow) -> None:
+        p = self._pass_of(flow)
+        self._vt = p
+        self._pass[flow] = p + 1.0 / self.weight(flow)
 
 
 class BatchScheduler:
@@ -67,6 +142,9 @@ class BatchScheduler:
         metrics: Optional[MetricsRegistry] = None,
         max_wait_s: Optional[float] = None,
         close_margin_s: float = 0.0,
+        profile_for=None,
+        picker: Optional[WeightedFairPicker] = None,
+        margin_ewma: float = 0.2,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -87,34 +165,74 @@ class BatchScheduler:
         # wakes *at* the trigger plus scheduling jitter, so with a
         # microscopic exec estimate a zero-margin close would land past
         # the deadline and hard-expire the very request it was closing
-        # for.  Real-clock runtimes pass a few milliseconds; the virtual
-        # clock has no jitter, so tests keep the exact 0.0 default.
+        # for.  The constructor value is a *floor*: observed wake-up
+        # lateness (fed by the worker loop through ``observe_wakeup``)
+        # folds into an EWMA and the effective margin is
+        # max(floor, ewma) — the margin adapts to the jitter this host
+        # actually exhibits instead of trusting a constant.  Real-clock
+        # runtimes pass a few milliseconds as the floor; the virtual
+        # clock has no jitter and never observes, so tests keep the
+        # exact 0.0 default.
         self.close_margin_s = float(close_margin_s)
+        self.margin_ewma = float(margin_ewma)
+        self._jitter_ewma_s = 0.0
+        # ``profile_for(bucket) -> BatchProfile`` resolves per-bucket
+        # batching limits (fleet: per-servable micro-batcher geometry);
+        # None keeps the scheduler-wide max_batch/batch_sizes for every
+        # bucket, which is the single-engine behavior, bit for bit.
+        self.profile_for = profile_for
+        # Orders each poll's ready batches across flows (weighted-fair in
+        # the fleet); None keeps bucket-first-seen order.
+        self.picker = picker
 
     # ------------------------------------------------------------------
 
-    def padded_width(self, n: int) -> int:
+    def _profile(self, bucket) -> BatchProfile:
+        if self.profile_for is not None:
+            prof = self.profile_for(bucket)
+            if prof is not None:
+                return prof
+        return BatchProfile(self.max_batch, self.batch_sizes)
+
+    def observe_wakeup(self, lateness_s: float) -> None:
+        """Fold one observed worker wake-up lateness into the margin EWMA
+        (called by the loop when a timed wait targeted at a close trigger
+        lands past it)."""
+        lateness = max(float(lateness_s), 0.0)
+        self._jitter_ewma_s = ((1 - self.margin_ewma) * self._jitter_ewma_s
+                               + self.margin_ewma * lateness)
+
+    @property
+    def effective_close_margin_s(self) -> float:
+        """The margin deadline triggers actually subtract: the configured
+        constant as a floor, raised by the EWMA of measured wake jitter."""
+        return max(self.close_margin_s, self._jitter_ewma_s)
+
+    def padded_width(self, n: int, bucket=None) -> int:
         """The executable width a batch of ``n`` requests actually runs at
         (the warmed power-of-two ladder) — also the key measured execution
-        times are recorded under, so estimates and observations meet."""
-        return _pad_batch(self.batch_sizes, n)
+        times are recorded under, so estimates and observations meet.
+        ``bucket`` resolves a per-bucket ladder when profiles are set."""
+        sizes = (self.batch_sizes if bucket is None
+                 else self._profile(bucket).batch_sizes)
+        return _pad_batch(sizes, n)
 
     def _est(self, bucket, n: int) -> float:
         if self.estimator is None:
             return 0.0
-        return self.estimator.estimate(bucket, self.padded_width(n))
+        return self.estimator.estimate(bucket, self.padded_width(n, bucket))
 
     def close_time(self, bucket, group: Sequence[Request]) -> float:
         """The instant this group's deadline trigger fires (inf = never)."""
         if not group:
             return math.inf
-        if len(group) >= self.max_batch:
+        if len(group) >= self._profile(bucket).max_batch:
             return -math.inf
         t = math.inf
         deadlines = [r.deadline for r in group if r.deadline is not None]
         if deadlines:
             t = (min(deadlines) - self._est(bucket, len(group))
-                 - self.close_margin_s)
+                 - self.effective_close_margin_s)
         if self.max_wait_s is not None:
             # Sojourn bound for *best-effort* requests only: a deadline
             # carries its own close trigger, and capping it here would let
@@ -145,9 +263,10 @@ class BatchScheduler:
             # Snapshot: closing mutates the group dict under iteration.
             for bucket, group in list(self.queue.groups().items()):
                 self._shed_expired(bucket, group, now)
-                while len(group) >= self.max_batch:
+                max_batch = self._profile(bucket).max_batch
+                while len(group) >= max_batch:
                     batch = sorted(
-                        group, key=Request.order_key)[: self.max_batch]
+                        group, key=Request.order_key)[: max_batch]
                     self.queue.remove(batch)
                     self.metrics.inc("batches_full")
                     closed.append(ClosedBatch(bucket, batch, now, "full"))
@@ -156,6 +275,8 @@ class BatchScheduler:
                     self.queue.remove(batch)
                     self.metrics.inc("batches_deadline")
                     closed.append(ClosedBatch(bucket, batch, now, "deadline"))
+        if self.picker is not None:
+            closed = self.picker.order(closed)
         return closed
 
     def flush(self, now: Optional[float] = None) -> List[ClosedBatch]:
@@ -166,8 +287,9 @@ class BatchScheduler:
             for bucket, group in list(self.queue.groups().items()):
                 ordered = sorted(group, key=Request.order_key)
                 self.queue.remove(ordered)
-                for lo in range(0, len(ordered), self.max_batch):
-                    chunk = ordered[lo: lo + self.max_batch]
+                max_batch = self._profile(bucket).max_batch
+                for lo in range(0, len(ordered), max_batch):
+                    chunk = ordered[lo: lo + max_batch]
                     self.metrics.inc("batches_flush")
                     closed.append(ClosedBatch(bucket, chunk, now, "flush"))
         return closed
@@ -195,6 +317,8 @@ class BatchScheduler:
         self.queue.remove(doomed)
         for r in doomed:
             self.metrics.inc("shed_expired")
+            if r.tenant is not None:
+                self.metrics.inc(labeled("shed_expired", tenant=r.tenant))
             if not r.future.done():
                 r.future.set_exception(DeadlineExceededError(
                     f"deadline {r.deadline:.6f} expired at {now:.6f}"))

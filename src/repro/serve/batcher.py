@@ -394,6 +394,15 @@ class MicroBatcher:
             self._executables[key] = exe
         return exe
 
+    def clear_executables(self) -> int:
+        """Drop every AOT executable (fleet hot-unload reclaiming compile
+        memory); returns how many were dropped.  ``compiles`` keeps
+        counting monotonically, so re-warming after a reload is visible
+        to the zero-recompile assertions rather than hidden by a reset."""
+        dropped = len(self._executables)
+        self._executables.clear()
+        return dropped
+
     def warmup(
         self,
         params,

@@ -10,7 +10,86 @@ from __future__ import annotations
 
 import os
 import pickle
-from typing import Any, Callable, Optional, Tuple
+from collections import OrderedDict
+from typing import Any, Callable, Iterator, Optional, Tuple
+
+
+class LruDict:
+    """Weighted LRU map: the in-memory half of every artifact cache here.
+
+    ``capacity`` bounds the *total weight* of resident entries (weights
+    default to 1.0, so an unweighted LruDict is a plain max-entries LRU).
+    Reads and writes touch recency; inserting past capacity evicts
+    least-recently-used entries — but never the entry just inserted, so a
+    single over-budget value still loads (matching how the artifact
+    registry has always admitted one oversized graph rather than thrash).
+    ``on_evict(key, value)`` fires for each capacity eviction (not for
+    explicit ``pop``), which is where dependent caches drop their rows
+    and fleet managers unload servables.
+    """
+
+    def __init__(
+        self,
+        capacity: float,
+        *,
+        on_evict: Optional[Callable[[Any, Any], None]] = None,
+    ):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be > 0, got {capacity}")
+        self.capacity = float(capacity)
+        self.on_evict = on_evict
+        self._data: "OrderedDict[Any, Any]" = OrderedDict()
+        self._weights: dict = {}
+        self.total_weight = 0.0
+        self.evictions = 0
+
+    def __contains__(self, key: Any) -> bool:
+        return key in self._data
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __iter__(self) -> Iterator:
+        return iter(self._data)
+
+    def get(self, key: Any, default: Any = None) -> Any:
+        if key not in self._data:
+            return default
+        self._data.move_to_end(key)
+        return self._data[key]
+
+    def __getitem__(self, key: Any) -> Any:
+        self._data.move_to_end(key)
+        return self._data[key]
+
+    def put(self, key: Any, value: Any, weight: float = 1.0) -> None:
+        if key in self._data:
+            self.total_weight -= self._weights[key]
+        self._data[key] = value
+        self._data.move_to_end(key)
+        self._weights[key] = float(weight)
+        self.total_weight += float(weight)
+        while self.total_weight > self.capacity and len(self._data) > 1:
+            old_key, old_val = self._data.popitem(last=False)
+            self.total_weight -= self._weights.pop(old_key)
+            self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(old_key, old_val)
+
+    def pop(self, key: Any, default: Any = None) -> Any:
+        if key not in self._data:
+            return default
+        self.total_weight -= self._weights.pop(key)
+        return self._data.pop(key)
+
+    def keys(self):
+        return self._data.keys()
+
+    def values(self):
+        return self._data.values()
+
+    def items(self):
+        return self._data.items()
 
 _REPO_ROOT = os.path.dirname(
     os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

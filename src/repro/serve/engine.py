@@ -265,17 +265,30 @@ class ServeEngine:
 
         return ServeRuntime(self, **kw)
 
+    def servable(self, key: Optional[str] = None, **kw) -> "GcnServable":
+        """Wrap this engine as a fleet servable (``repro.fleet``); ``key``
+        defaults to the graph's content hash, so two engines over the same
+        preprocessed graph collide deliberately."""
+        from repro.fleet.servable import GcnServable
+
+        return GcnServable(self, key=key, **kw)
+
+    @property
+    def graph_key(self) -> str:
+        """Content hash identifying this engine's graph (cached)."""
+        if self._graph_key is None:
+            from repro.serve.registry import graph_key
+
+            self._graph_key = graph_key(self.adj_norm, self.cfg)
+        return self._graph_key
+
     def _sync_runtime(self) -> "ServeRuntime":
         """The facade's runtime: unbounded (a synchronous batch must never
         shed), never threaded (drained inline per call), and built fresh
         per call so its raw-sample metrics registry stays bounded by one
         batch instead of growing for the engine's lifetime.  The graph
         content hash is computed once per engine and reused."""
-        if self._graph_key is None:
-            from repro.serve.registry import graph_key
-
-            self._graph_key = graph_key(self.adj_norm, self.cfg)
-        return self.runtime(capacity=None, graph_key=self._graph_key)
+        return self.runtime(capacity=None, graph_key=self.graph_key)
 
     # ------------------------------------------------------------------
 

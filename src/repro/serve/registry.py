@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from collections import OrderedDict
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -63,7 +62,11 @@ class ArtifactRegistry:
         self.cache_dir = cache_dir or disk_cache.default_cache_dir()
         self.mem_capacity = mem_capacity
         self.stats = RegistryStats()
-        self._graphs: "OrderedDict[str, GCNGraph]" = OrderedDict()
+        # A jitted step closes over its operand; when the LRU drops the
+        # graph, keeping the step would pin the memory the eviction was
+        # supposed to release, so eviction cascades into _forwards.
+        self._graphs = disk_cache.LruDict(
+            mem_capacity, on_evict=self._drop_forwards)
         self._forwards: Dict[Tuple[str, GCNConfig], Callable] = {}
 
     def get_or_build(
@@ -81,7 +84,6 @@ class ArtifactRegistry:
             key = graph_key(adj, cfg)
         graph = self._graphs.get(key)
         if graph is not None:
-            self._graphs.move_to_end(key)
             self.stats.mem_hits += 1
             return graph
         if persist:
@@ -134,9 +136,8 @@ class ArtifactRegistry:
         return fwd
 
     def _remember(self, key: str, graph: GCNGraph) -> None:
-        self._graphs[key] = graph
-        self._graphs.move_to_end(key)
-        while len(self._graphs) > self.mem_capacity:
-            old, _ = self._graphs.popitem(last=False)
-            for fkey in [k for k in self._forwards if k[0] == old]:
-                del self._forwards[fkey]
+        self._graphs.put(key, graph)
+
+    def _drop_forwards(self, key: str, _graph: GCNGraph) -> None:
+        for fkey in [k for k in self._forwards if k[0] == key]:
+            del self._forwards[fkey]

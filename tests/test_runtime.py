@@ -157,6 +157,56 @@ def test_deadline_trigger_estimates_at_padded_batch_width():
     assert sched.next_close_time() == pytest.approx(9.6)
 
 
+def test_adaptive_close_margin_from_wakeup_jitter():
+    """Observed wake-up lateness raises the effective margin via EWMA;
+    the configured constant stays as the floor, and the virtual clock
+    (which never observes) keeps the exact historical close times."""
+    clock, queue, sched = _rig(est=0.25)
+    assert sched.effective_close_margin_s == 0.0
+    queue.submit(_req(deadline=10.0))
+    assert sched.next_close_time() == pytest.approx(9.75)   # unchanged
+
+    # jitter folds in at margin_ewma (default 0.2) per observation
+    sched.observe_wakeup(0.010)
+    assert sched.effective_close_margin_s == pytest.approx(0.002)
+    sched.observe_wakeup(0.010)
+    assert sched.effective_close_margin_s == pytest.approx(0.0036)
+    # the deadline trigger now subtracts the adapted margin
+    assert sched.next_close_time() == pytest.approx(9.75 - 0.0036)
+    # negative lateness (woke early) clamps to 0, decaying the EWMA
+    sched.observe_wakeup(-1.0)
+    assert sched.effective_close_margin_s == pytest.approx(0.00288)
+
+    # the constructor margin is a floor the EWMA cannot undercut
+    clock2, queue2, sched2 = _rig(est=0.25)
+    sched2.close_margin_s = 0.005
+    sched2.observe_wakeup(0.001)
+    assert sched2.effective_close_margin_s == 0.005
+    for _ in range(50):
+        sched2.observe_wakeup(0.1)
+    assert sched2.effective_close_margin_s > 0.005
+
+
+def test_queue_key_check_rejects_unknown_servable():
+    from repro.runtime import UnknownServableError
+
+    clock = VirtualClock()
+    queue = RequestQueue(capacity=8, clock=clock,
+                         key_check=lambda k: k == "good")
+    queue.submit(Request(graph_key="good", seeds=(0,), bucket=B64,
+                         padded=object()))
+    victim = Request(graph_key="evil", seeds=(0,), bucket=B64,
+                     padded=object())
+    with pytest.raises(UnknownServableError):
+        queue.submit(victim)
+    with pytest.raises(UnknownServableError):
+        victim.future.result(timeout=0)
+    m = queue.metrics
+    assert m.count("rejected_unknown_servable") == 1
+    assert m.count("submitted") == 2 and m.count("admitted") == 1
+    assert queue.depth == 1
+
+
 def test_edf_ordering_within_batch():
     clock, queue, sched = _rig(max_batch=8)
     late = _req(deadline=5.0)
@@ -602,6 +652,24 @@ def test_graceful_drain_with_running_worker(toy_engine_parts):
     for r in reqs:
         assert r.future.result(timeout=5).shape == (1, engine.cfg.out_dim)
     assert rt.metrics.count("completed") == len(reqs)
+
+
+def test_serve_runtime_rejects_mismatched_graph_key(toy_engine_parts):
+    """A graph_key naming anything but this engine's graph used to
+    enqueue and silently answer from the wrong graph; it now sheds at
+    admission (satellite of the fleet's routing validation)."""
+    from repro.runtime import UnknownServableError
+
+    engine = _toy_engine(toy_engine_parts)
+    rt = engine.runtime(capacity=8, clock=VirtualClock())
+    ok = rt.submit([0, 1])                    # defaulted key: admitted
+    with pytest.raises(UnknownServableError):
+        rt.submit([0, 1], graph_key="bogus")
+    assert rt.metrics.count("rejected_unknown_servable") == 1
+    rt.submit([2], graph_key=rt.graph_key)    # explicit correct key: fine
+    rt.drain()
+    assert ok.future.result(timeout=0) is not None
+    assert rt.metrics.count("completed") == 2
 
 
 def test_bench_queue_smoke(monkeypatch, capsys, tmp_path):

@@ -114,6 +114,78 @@ def test_registry_eviction_drops_forward_steps(toy_graph, tmp_path):
     assert reg.stats.disk_hits == 1 and reg.stats.builds == 2
 
 
+def test_lru_dict_weighted_eviction_and_callbacks():
+    """The LruDict contract the registry and fleet manager both rely on:
+    weight-bounded capacity, recency on get/put, eviction callbacks for
+    capacity evictions only, and never evicting the just-inserted entry."""
+    from repro.serve.cache import LruDict
+
+    evicted = []
+    d = LruDict(3.0, on_evict=lambda k, v: evicted.append(k))
+    d.put("a", 1)
+    d.put("b", 2)
+    d.put("c", 3)
+    assert len(d) == 3 and d.total_weight == 3.0
+    d.get("a")                       # a becomes MRU
+    d.put("d", 4)                    # evicts b (LRU), not a
+    assert "b" not in d and "a" in d and evicted == ["b"]
+    # weighted: one 2-unit entry displaces two 1-unit ones
+    d.put("big", 5, weight=2.0)
+    assert evicted == ["b", "c", "a"] and "d" in d and "big" in d
+    # a single over-budget entry still loads (never evict the new entry)
+    d.put("huge", 6, weight=99.0)
+    assert "huge" in d and len(d) == 1
+    assert d.evictions == 5
+    # explicit pop does NOT fire the eviction callback
+    before = list(evicted)
+    assert d.pop("huge") == 6 and evicted == before
+    assert d.pop("ghost", "dflt") == "dflt"
+    with pytest.raises(ValueError):
+        LruDict(0)
+
+
+def test_registry_multi_graph_churn_with_inflight_forward(toy_graph):
+    """Multi-graph churn (satellite): LRU eviction + disk re-fetch while
+    another graph's jitted forward_step is still in flight, with exact
+    stats accounting across >= 3 graphs."""
+    adj_norm, feats = toy_graph
+    cfgs = [_cfg(tau=t) for t in (3, 4, 5)]
+    reg = ArtifactRegistry(mem_capacity=2)
+
+    # Hold a live forward step for graph 0 — the "in flight" servable.
+    fwd0 = reg.forward_step(adj_norm, cfgs[0])
+    params = init_params(cfgs[0], jax.random.PRNGKey(0))
+    want0 = np.asarray(fwd0(params, feats))
+    assert reg.stats.builds == 1
+
+    # Churn graphs 1 and 2 through the capacity-2 LRU: graph 0 evicts.
+    reg.forward_step(adj_norm, cfgs[1])
+    reg.forward_step(adj_norm, cfgs[2])
+    assert reg.stats.builds == 3
+    assert graph_key(adj_norm, cfgs[0]) not in reg._graphs
+    assert len(reg._graphs) == 2
+
+    # The evicted graph's held step still serves — it closed over its
+    # operand, so eviction frees the registry slot without breaking the
+    # in-flight servable.
+    np.testing.assert_array_equal(np.asarray(fwd0(params, feats)), want0)
+
+    # Re-fetch after eviction: disk hit, not a rebuild; results identical.
+    fwd0_again = reg.forward_step(adj_norm, cfgs[0])
+    assert reg.stats.disk_hits == 1 and reg.stats.builds == 3
+    np.testing.assert_allclose(np.asarray(fwd0_again(params, feats)),
+                               want0, rtol=1e-5, atol=1e-5)
+
+    # Exact stats across the whole churn: every graph re-requested from
+    # memory afterwards is a mem hit, and the counters reconcile.
+    reg.get_or_build(adj_norm, cfgs[0])
+    reg.get_or_build(adj_norm, cfgs[2])
+    assert reg.stats.mem_hits == 2
+    assert (reg.stats.builds, reg.stats.disk_hits, reg.stats.mem_hits) \
+        == (3, 1, 2)
+    assert reg._graphs.evictions == 2       # graph0 then graph1
+
+
 def test_registry_key_sensitivity(toy_graph):
     adj_norm, _ = toy_graph
     assert graph_key(adj_norm, _cfg()) != graph_key(adj_norm, _cfg(tau=4))
