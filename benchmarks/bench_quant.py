@@ -1,0 +1,157 @@
+"""Quantized serving: f32 vs bf16 vs int8 on the skewed bench cell.
+
+One synthetic power-law graph (the ``skewed`` cell the plan bench uses:
+n=256, nnz=2000, alpha=2.5, tau=4, fdim=32) runs the 2-layer GCN forward
+at every serving precision.  Per precision the bench reports:
+
+* modeled DRAM traffic from the ``spmm_dram`` ledger kind (eager
+  ``gcn_forward`` — dispatch records host-side only for concrete
+  operands, so the jitted path contributes nothing and each eager run is
+  one clean per-execution total);
+* measured latency through the jitted forward (what serving runs);
+* max relative logit error vs the bitwise-f32 baseline
+  (``repro.exec.quant.logit_error`` — the same metric ``--precision
+  auto`` budgets against).
+
+``--check`` gates the paper claims: int8 moves < 0.6x the f32 DRAM bytes
+(the >=1.5x traffic reduction) and every precision's logit error stays
+under the default 0.05 accuracy budget.  Writes the standard BENCH json
+to ``results/bench/quant_serving.json`` (``REPRO_BENCH_DIR`` to
+relocate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+BENCH_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+ACCURACY_BUDGET = 0.05
+INT8_DRAM_GATE = 0.6          # int8 bytes must be < gate * f32 bytes
+
+#              name       n    nnz   alpha  tau  fdim
+SMOKE_CASES = [("skewed", 256, 2_000, 2.5, 4, 32)]
+FULL_CASES = SMOKE_CASES + [("skewed-large", 512, 8_000, 2.5, 6, 64)]
+
+
+def _bench_records(smoke: bool):
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.sparse_formats import random_power_law_csr
+    from repro.dist.collectives import LEDGER
+    from repro.exec import quant
+    from repro.models.gcn import GCNConfig, GCNGraph, gcn_forward, init_params
+
+    records = []
+    for name, n, nnz, alpha, tau, fdim in (SMOKE_CASES if smoke
+                                           else FULL_CASES):
+        adj = random_power_law_csr(n, n, nnz, alpha=alpha, seed=0)
+        cfg = GCNConfig(in_dim=fdim, hidden_dim=fdim, out_dim=fdim, tau=tau)
+        graph = GCNGraph.build(adj, cfg)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        feats = jnp.asarray(
+            np.random.default_rng(1).standard_normal((n, fdim)), jnp.float32)
+
+        ref = None
+        base_dram = None
+        for precision in quant.PRECISIONS:
+            # DRAM: one eager forward, ledgered host-side per dispatch.
+            LEDGER.reset()
+            eager = np.asarray(gcn_forward(params, graph, feats, cfg,
+                                           precision=precision))
+            dram = LEDGER.total_bytes("spmm_dram")
+            assert dram > 0, "eager forward recorded no spmm_dram traffic"
+
+            # Latency: the jitted step serving actually runs.
+            fwd = jax.jit(lambda p, f, _prec=precision: gcn_forward(
+                p, graph, f, cfg, precision=_prec))
+            out = np.asarray(fwd(params, feats))     # warm/compile
+            t0 = time.perf_counter()
+            reps = 5
+            for _ in range(reps):
+                jax.block_until_ready(fwd(params, feats))
+            us = (time.perf_counter() - t0) / reps * 1e6
+
+            if precision == "f32":
+                ref, base_dram = out, dram
+                assert np.array_equal(out, eager), \
+                    "jitted f32 diverged from eager f32"
+            err = quant.logit_error(ref, out)
+            records.append({
+                "case": name,
+                "precision": precision,
+                "dram_bytes": round(dram),
+                "dram_ratio_vs_f32": round(dram / base_dram, 4),
+                "traffic_reduction_x": round(base_dram / dram, 3),
+                "time_us": round(us, 1),
+                "logit_err": float(err),
+                "err_ok": bool(err <= ACCURACY_BUDGET),
+                "f32_bitwise": bool(precision != "f32"
+                                    or np.array_equal(out, ref)),
+            })
+    return records
+
+
+def _gate(records) -> None:
+    """Raise unless the paper claims hold on every case."""
+    problems = []
+    for r in records:
+        if not r["err_ok"]:
+            problems.append(f"{r['case']}/{r['precision']}: logit error "
+                            f"{r['logit_err']:.4f} > {ACCURACY_BUDGET}")
+        if not r["f32_bitwise"]:
+            problems.append(f"{r['case']}: f32 not bitwise vs baseline")
+        if r["precision"] == "int8" \
+                and r["dram_ratio_vs_f32"] >= INT8_DRAM_GATE:
+            problems.append(
+                f"{r['case']}/int8: DRAM ratio {r['dram_ratio_vs_f32']:.3f} "
+                f">= {INT8_DRAM_GATE} (traffic reduction only "
+                f"{r['traffic_reduction_x']:.2f}x)")
+    if problems:
+        raise SystemExit("quant bench gate failed: " + "; ".join(problems))
+
+
+def run(csv=print, smoke: bool = True, check: bool = False,
+        json_path: str | None = None) -> dict:
+    csv("case,precision,dram_bytes,traffic_reduction_x,time_us,"
+        "logit_err,err_ok")
+    records = _bench_records(smoke)
+    for r in records:
+        csv(f"{r['case']},{r['precision']},{r['dram_bytes']},"
+            f"{r['traffic_reduction_x']:.2f},{r['time_us']:.0f},"
+            f"{r['logit_err']:.5f},{int(r['err_ok'])}")
+    payload = {"benchmark": "quant_serving", "smoke": smoke,
+               "accuracy_budget": ACCURACY_BUDGET,
+               "int8_dram_gate": INT8_DRAM_GATE,
+               "records": records}
+    path = json_path or os.path.join(BENCH_DIR, "quant_serving.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    if check:
+        _gate(records)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless int8 DRAM < "
+                         f"{INT8_DRAM_GATE}x f32 and every precision's "
+                         f"logit error <= {ACCURACY_BUDGET}")
+    ap.add_argument("--json",
+                    default=os.path.join(BENCH_DIR, "quant_serving.json"))
+    args = ap.parse_args()
+    run(smoke=args.smoke or not args.full, check=args.check,
+        json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

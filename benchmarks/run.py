@@ -20,6 +20,7 @@ from benchmarks import (  # noqa: E402
     bench_flexible_k,
     bench_pipeline,
     bench_plan,
+    bench_quant,
     bench_queue,
     bench_serve,
     bench_spmm_kernel,
@@ -41,6 +42,7 @@ def main() -> None:
         ("SpMM sharded (1 vs N devices)", bench_spmm_sharded),
         ("Autoplan vs static plan", bench_plan),
         ("Pipelined multi-layer forward (sharded activations)", bench_pipeline),
+        ("Quantized serving (f32/bf16/int8)", bench_quant),
         ("Serving engine", bench_serve),
         ("Async queue (open-loop Poisson)", bench_queue),
         ("Fleet (multi-tenant hot/cold isolation)", bench_fleet),

@@ -85,6 +85,8 @@ def spmm_ell_arrays(
     interpret: Optional[bool] = None,
     *,
     plan=None,
+    scales: Optional[jax.Array] = None,
+    scale_block_rows: Optional[int] = None,
 ) -> jax.Array:
     """Array-level ``spmm_ell``: same math, but fully jit-traceable.
 
@@ -96,6 +98,10 @@ def spmm_ell_arrays(
     resolves to the masked dense grid here — with a one-time warning, the
     switch recorded on the resolved plan (``effective_impl`` /
     ``degraded_reason``) rather than applied silently.
+
+    ``scales``/``scale_block_rows`` mark ``vals`` as stored int8 with
+    symmetric per-row-block scales (``exec.quant``); the plan's
+    ``precision`` decides how those tiles are loaded and dequantized.
     """
     from repro.exec import SpmmOperands, SpmmPlan, execute
 
@@ -107,9 +113,18 @@ def spmm_ell_arrays(
             block_f=block_f,
             interpret=interpret,
         )
-    return execute(
-        plan, SpmmOperands.from_arrays(cols, vals, row_map, n_out_rows), dense
+    if scales is not None and scale_block_rows is None:
+        scale_block_rows = plan.block_rows
+    operands = SpmmOperands(
+        cols=cols,
+        vals=vals,
+        row_map=row_map,
+        n_out_rows=n_out_rows,
+        scales=scales,
+        scale_block_rows=scale_block_rows,
+        precision="int8" if scales is not None else "f32",
     )
+    return execute(plan, operands, dense)
 
 
 def _segment_accumulate(

@@ -66,9 +66,12 @@ class ShardingPlan:
 
     # -- parameters ---------------------------------------------------------
 
-    def param_spec(self, name: str, shape: Sequence[int]) -> P:
+    def param_spec(self, name: str, shape: Sequence[int],
+                   dtype=None) -> P:
         cands = self._param_candidates(name, shape)
-        return P(*cands[cost.rank_specs(self.mesh, shape, cands)])
+        nbytes = cost.TPU_V5E.bytes_per_element(dtype) if dtype is not None \
+            else 4
+        return P(*cands[cost.rank_specs(self.mesh, shape, cands, nbytes)])
 
     def _param_candidates(
         self, name: str, shape: Sequence[int]
@@ -131,20 +134,26 @@ class ShardingPlan:
     def shard_params(self, tree: Any) -> Any:
         def one(path, leaf):
             return NamedSharding(
-                self.mesh, self.param_spec(_path_name(path), leaf.shape))
+                self.mesh,
+                self.param_spec(
+                    _path_name(path), leaf.shape,
+                    dtype=getattr(leaf, "dtype", None)),
+            )
         return jax.tree_util.tree_map_with_path(one, tree)
 
     # -- decode caches ------------------------------------------------------
 
     def cache_spec(self, name: str, shape: Sequence[int],
-                   dp: Tuple[str, ...]) -> P:
+                   dp: Tuple[str, ...], dtype=None) -> P:
         parts = [p for p in name.split("/") if p]
         ndim = len(shape)
         lo = 1 if parts and parts[0] in _STACKED else 0
         spec: list = [None] * ndim
         dp = tuple(a for a in dp if a in self.mesh.shape)
+        nbytes = cost.TPU_V5E.bytes_per_element(dtype) if dtype is not None \
+            else 4
         if ndim > lo:
-            spec[lo] = _dp_entry(self.mesh, dp, shape[lo])
+            spec[lo] = _dp_entry(self.mesh, dp, shape[lo], nbytes)
         # (B, S, KV, hd) attention caches: kv heads over the model axis
         model, msize = self.model_axis, 0
         if model:
@@ -157,11 +166,15 @@ class ShardingPlan:
     def shard_cache(self, tree: Any, dp: Tuple[str, ...]) -> Any:
         def one(path, leaf):
             return NamedSharding(
-                self.mesh, self.cache_spec(_path_name(path), leaf.shape, dp))
+                self.mesh,
+                self.cache_spec(
+                    _path_name(path), leaf.shape, dp,
+                    dtype=getattr(leaf, "dtype", None)),
+            )
         return jax.tree_util.tree_map_with_path(one, tree)
 
 
-def _dp_entry(mesh, dp: Tuple[str, ...], dim: int):
+def _dp_entry(mesh, dp: Tuple[str, ...], dim: int, dtype_bytes: int = 4):
     """Cheapest dp-axis suffix that divides ``dim``, by estimated
     collective bytes (suffixes drop ``pod`` first, mirroring the fallback
     order of the ``constrain`` call sites — the cost model prefers the
@@ -175,7 +188,7 @@ def _dp_entry(mesh, dp: Tuple[str, ...], dim: int):
     if not viable:
         return None
     specs = [(c if len(c) > 1 else c[0],) for c in viable]
-    chosen = viable[cost.rank_specs(mesh, (dim,), specs)]
+    chosen = viable[cost.rank_specs(mesh, (dim,), specs, dtype_bytes)]
     return chosen if len(chosen) > 1 else chosen[0]
 
 

@@ -25,7 +25,12 @@ over the ``data`` mesh axis from the same code:
                  :func:`pipeline_forward`: joint planning of a whole GCN
                  stack — per-layer impl/blocks, one data-mesh width, and
                  the activation layout at every layer boundary — so
-                 activations stay sharded end-to-end.
+                 activations stay sharded end-to-end;
+* ``quant``    — storage-precision policy (f32 | bf16 | int8): symmetric
+                 per-row-block int8 quantization with exact dequant,
+                 bf16 casting for values/activations/weights, and the
+                 :class:`~repro.exec.quant.QuantizedELL` host artifact
+                 the registry caches — kernels always accumulate in f32.
 
 Layering: ``exec`` imports ``core``, ``kernels`` and ``dist``; ``core``
 reaches back only through deferred imports inside ``spmm_ell`` /
@@ -37,8 +42,10 @@ from repro.exec.plan import (
     plan_for_config,
     reset_degradation_warnings,
 )
+from repro.exec import quant
+from repro.exec.quant import QuantizedELL, quantize_ell
 from repro.exec.operands import ShardedOperands, SpmmOperands, shard_operands
-from repro.exec.dispatch import execute, sub_row_products
+from repro.exec.dispatch import execute, prepare_precision, sub_row_products
 from repro.exec.sharded import execute_sharded
 from repro.exec.pipeline import (
     GcnPipelinePlan,
@@ -52,6 +59,7 @@ from repro.exec.pipeline import (
 __all__ = [
     "GcnPipelinePlan",
     "LayerPlan",
+    "QuantizedELL",
     "chain_layouts",
     "static_pipeline",
     "ShardedOperands",
@@ -62,6 +70,9 @@ __all__ = [
     "pipeline_forward",
     "plan_for_config",
     "plan_pipeline",
+    "prepare_precision",
+    "quant",
+    "quantize_ell",
     "reset_degradation_warnings",
     "shard_operands",
     "sub_row_products",

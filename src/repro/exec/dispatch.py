@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.sparse_formats import PAD_COL, TiledELL
 from repro.core.spmm import segment_accumulate
+from repro.exec import quant
 from repro.exec.operands import SpmmOperands
 from repro.exec.plan import SpmmPlan
 
@@ -26,20 +27,29 @@ from repro.exec.plan import SpmmPlan
 def sub_row_products(
     plan: SpmmPlan,
     cols: jax.Array,      # (R, tau) int32, PAD_COL padding
-    vals: jax.Array,      # (R, tau), already cast to the dense dtype
+    vals: jax.Array,      # (R, tau), already cast to the storage dtype
     dense: jax.Array,     # (K, F)
     ell: Optional[TiledELL] = None,
+    scales: Optional[jax.Array] = None,  # (ceil(R/block_rows),) f32 (int8)
 ) -> jax.Array:
     """Per-sub-row products ``(R, F)`` with the plan's effective impl.
 
     The row-wise product core of the paper: each bounded (sub-)row times
     the dense operand, *before* the CMP partial-sum fold.  ``ell`` is the
     host container for ``pallas_sparse`` grid compaction; the plan must
-    already be resolved so the impl choice is pinned.
+    already be resolved so the impl choice is pinned.  ``scales`` carries
+    the per-row-block dequantization scales when ``vals`` is int8 — the
+    kernels dequantize on load and still accumulate in f32.
     """
     impl = plan.effective_impl
     assert impl is not None, "resolve() the plan before dispatch"
     if impl == "reference":
+        if scales is not None:
+            vals = quant.dequantize_values(vals, scales, plan.block_rows)
+        elif plan.precision != "f32":
+            # bf16 storage: widen before the gather product so the
+            # reference accumulates in f32 like the kernels do.
+            vals = vals.astype(jnp.float32)
         return _sub_row_products_ref(cols, vals, dense)
 
     from repro.kernels import flexvector_spmm as fv  # deferred: keeps exec
@@ -73,6 +83,7 @@ def sub_row_products(
             block_f=plan.block_f,
             out_dtype=plan.out_dtype,
             interpret=plan.interpret,
+            scales=scales,
         )
     else:  # pallas: paper-faithful masked dense grid
         sub = fv.spmm_ell_dense_grid(
@@ -84,6 +95,7 @@ def sub_row_products(
             block_f=plan.block_f,
             out_dtype=plan.out_dtype,
             interpret=plan.interpret,
+            scales=scales,
         )
     return sub[:r, :f]
 
@@ -103,6 +115,79 @@ def _ref_spmm(cols, vals, row_map, dense, n_out_rows: int) -> jax.Array:
     return segment_accumulate(sub, row_map, n_out_rows)
 
 
+def prepare_precision(plan: SpmmPlan, operands: SpmmOperands, dense: jax.Array):
+    """Cast/quantize the value plane for the plan's storage precision.
+
+    Returns ``(vals, scales, dense)`` ready for :func:`sub_row_products`:
+    ``vals`` in its storage dtype, ``scales`` per-``plan.block_rows``-block
+    f32 (int8 only, else ``None``), ``dense`` in its storage dtype.  The
+    f32 path is bitwise-untouched — the same cast the dispatcher always
+    did.  Pre-quantized operands (``operands.precision != "f32"``) are
+    used as stored when their scale blocking aligns with the plan's
+    kernel blocks, else dequantized exactly and carried at bf16.
+    """
+    precision = plan.precision
+    stored = operands.precision
+    vals = operands.vals
+    if precision == "f32":
+        if stored == "int8":
+            vals = quant.dequantize_values(
+                jnp.asarray(vals), jnp.asarray(operands.scales),
+                operands.scale_block_rows,
+            )
+        return jnp.asarray(vals, dtype=dense.dtype), None, dense
+    dense = quant.cast_dense(dense, precision)
+    if precision == "bf16":
+        if stored == "int8":
+            vals = quant.dequantize_values(
+                jnp.asarray(vals), jnp.asarray(operands.scales),
+                operands.scale_block_rows,
+            )
+        return jnp.asarray(vals, jnp.bfloat16), None, dense
+    # int8 execution
+    if stored == "int8":
+        scales = quant.align_scales(
+            operands.scales, operands.scale_block_rows, plan.block_rows
+        )
+        if scales is None:  # kernel blocks straddle quantization blocks
+            vals = quant.dequantize_values(
+                jnp.asarray(vals), jnp.asarray(operands.scales),
+                operands.scale_block_rows,
+            )
+            return jnp.asarray(vals, jnp.bfloat16), None, dense
+        return (
+            jnp.asarray(vals, jnp.int8),
+            jnp.asarray(scales, jnp.float32),
+            dense,
+        )
+    q, scales = quant.quantize_values(vals, plan.block_rows)
+    return jnp.asarray(q), jnp.asarray(scales, jnp.float32), dense
+
+
+def record_spmm_dram(
+    plan: SpmmPlan, r: int, tau: int, k: int, f: int, n_out_rows: int
+) -> None:
+    """Ledger the modeled DRAM bytes one dispatch moves at this precision.
+
+    Host-side accounting (``LEDGER.record``), mirroring the cost model's
+    traffic terms: the ELL table (int32 cols + stored-width vals +
+    row_map + int8 scale vector), one streaming pass over the dense
+    operand, and the sub-row + folded activation writeback at the
+    activation storage width.  Called only for concrete operands, so
+    eager benches see per-execution totals.
+    """
+    from repro.dist.collectives import LEDGER  # deferred: no cycle
+
+    vb = quant.bytes_per_value(plan.precision)
+    ab = quant.activation_bytes(plan.precision)
+    sparse = r * tau * (4 + vb) + r * 4
+    if plan.precision == "int8":
+        sparse += -(-r // plan.block_rows) * 4
+    LEDGER.record(
+        "spmm_dram", float(sparse + k * f * ab + (r + n_out_rows) * f * ab)
+    )
+
+
 def execute(plan: SpmmPlan, operands: SpmmOperands, dense: jax.Array) -> jax.Array:
     """Run one planned SpMM: ``A @ dense`` for the bounded-row sparse ``A``.
 
@@ -118,9 +203,21 @@ def execute(plan: SpmmPlan, operands: SpmmOperands, dense: jax.Array) -> jax.Arr
 
         return execute_sharded(plan, operands, dense)
     cols = jnp.asarray(operands.cols)
-    vals = jnp.asarray(operands.vals, dtype=dense.dtype)
     row_map = jnp.asarray(operands.row_map)
+    vals, scales, dense = prepare_precision(plan, operands, dense)
+    if operands.concrete:
+        record_spmm_dram(
+            plan, cols.shape[0], cols.shape[1], dense.shape[0],
+            dense.shape[1], operands.n_out_rows,
+        )
     if plan.effective_impl == "reference":
+        if scales is not None:
+            vals = quant.dequantize_values(vals, scales, plan.block_rows)
+            scales = None
+        elif plan.precision != "f32":
+            vals = vals.astype(jnp.float32)
         return _ref_spmm(cols, vals, row_map, dense, operands.n_out_rows)
-    sub = sub_row_products(plan, cols, vals, dense, ell=operands.ell)
+    sub = sub_row_products(
+        plan, cols, vals, dense, ell=operands.ell, scales=scales
+    )
     return segment_accumulate(sub, row_map, operands.n_out_rows)

@@ -37,6 +37,12 @@ class SpmmOperands:
     ``ell`` keeps the host container when the caller had one — it is the
     scheduling handle for ``pallas_sparse`` grid compaction and the
     source of ``n_dense_rows`` for per-shard occupancy planning.
+
+    ``precision`` describes how ``vals`` is *stored* (``exec.quant``
+    semantics): f32 vals may still be executed under a quantized plan
+    (the dispatcher casts/quantizes at trace time), while int8 vals
+    carry their per-row-block ``scales`` (granularity
+    ``scale_block_rows``) from a prebuilt quantized artifact.
     """
 
     cols: jax.typing.ArrayLike      # (R, tau) int32, PAD_COL padding
@@ -44,6 +50,9 @@ class SpmmOperands:
     row_map: jax.typing.ArrayLike   # (R,) int32, -1 padding
     n_out_rows: int
     ell: Optional[TiledELL] = None
+    scales: Optional[jax.typing.ArrayLike] = None  # (ceil(R/sbr),) f32
+    scale_block_rows: Optional[int] = None
+    precision: str = "f32"
 
     @property
     def schedulable(self) -> bool:

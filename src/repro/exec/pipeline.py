@@ -121,7 +121,8 @@ def _layer_dims(cfg, n_layers: Optional[int] = None) -> Tuple[Tuple[int, int], .
 
 
 def _combination_seconds(n_rows: int, f_in: int, f_out: int, n_shards: int,
-                         in_layout: str, device) -> float:
+                         in_layout: str, device, act_bytes: int = 4,
+                         w_bytes: int = 4) -> float:
     """Roofline bound of the layer's dense ``x @ w`` on one device: a
     row-sharded input runs the matmul on local rows only — the second,
     quieter win of keeping activations sharded."""
@@ -131,7 +132,8 @@ def _combination_seconds(n_rows: int, f_in: int, f_out: int, n_shards: int,
         else n_rows
     )
     flops = 2.0 * rows * f_in * f_out
-    byts = float(rows) * (f_in + f_out) * 4 + float(f_in) * f_out * 4
+    byts = (float(rows) * (f_in + f_out) * act_bytes
+            + float(f_in) * f_out * w_bytes)
     return max(flops / device.peak_flops, byts / device.hbm_bw)
 
 
@@ -146,6 +148,7 @@ def plan_pipeline(
     out_layout: str = "replicated",
     device: cost_mod.DeviceModel = cost_mod.TPU_V5E,
     dtype_bytes: int = 4,
+    precision: str = "f32",
 ) -> GcnPipelinePlan:
     """Jointly plan every layer of a GCN stack over one graph.
 
@@ -159,8 +162,20 @@ def plan_pipeline(
     default.  ``out_layout`` pins the layout the stack must *emit*
     (``row_sharded`` when the consumer is another sharded stage; on a
     1-wide candidate the layouts coincide and replicated is used).
+    ``precision`` is stamped on every per-layer plan and fed to the cost
+    model, so a bf16/int8 stack is priced at its storage widths (weights
+    and activations count at their quantized bytes; the accumulator
+    collectives stay f32).
     """
+    from repro.exec.quant import activation_bytes, validate_precision
     from repro.plan.autoplan import candidate_widths, choose_plan
+
+    validate_precision(precision)
+    act_bytes = (
+        dtype_bytes if precision == "f32" else activation_bytes(precision))
+    w_bytes = (
+        dtype_bytes if precision == "f32"
+        else device.bytes_per_element(precision))
 
     stats = (
         cost_mod.graph_stats_from_ell(graph)
@@ -198,14 +213,15 @@ def plan_pipeline(
             block_rows=base_plan.block_rows, block_k=base_plan.block_k,
             block_f=base_plan.block_f, n_shards=width,
             out_layout=out_layout, dense_layout=in_layout,
-            shard_imbalance=imb, dtype_bytes=dtype_bytes, device=device,
+            shard_imbalance=imb, dtype_bytes=dtype_bytes,
+            precision=precision, device=device,
         ).seconds
         comb = _combination_seconds(n_out, f_in, f_out, width, in_layout,
-                                    device)
+                                    device, act_bytes, w_bytes)
         # Per-device share of the layout's activation writeback; the
         # replication factor is what distinguishes the layouts here.
         wb = cost_mod.activation_writeback_bytes(
-            n_out, f_out, width, out_layout, dtype_bytes
+            n_out, f_out, width, out_layout, act_bytes
         ) / max(width, 1) / device.hbm_bw
         return spmm + comb + wb
 
@@ -272,6 +288,7 @@ def plan_pipeline(
                 spmm=dataclasses.replace(
                     bases[i], mesh=w_mesh, dense_layout=in_l,
                     out_layout=out_l, interpret=interpret,
+                    precision=precision,
                 ),
                 f_in=dims[i][0], f_out=dims[i][1],
                 in_layout=in_l, out_layout=out_l,
@@ -310,6 +327,7 @@ def static_pipeline(
     interpret: Optional[bool] = None,
     n_layers: Optional[int] = None,
     impl: Optional[str] = None,
+    precision: str = "f32",
 ) -> GcnPipelinePlan:
     """A :class:`GcnPipelinePlan` from the config alone — no cost model.
 
@@ -333,7 +351,7 @@ def static_pipeline(
     base = SpmmPlan(
         impl=impl or cfg.spmm_impl, block_rows=cfg.block_rows,
         block_k=cfg.block_k, block_f=cfg.block_f, interpret=interpret,
-        mesh=mesh,
+        mesh=mesh, precision=precision,
     )
     layers = tuple(
         LayerPlan(
@@ -367,6 +385,7 @@ def pipeline_forward(
         f"pipeline plan has {len(pplan.layers)} layers, params have "
         f"{len(params)}"
     )
+    from repro.exec import quant
     from repro.exec.dispatch import execute
 
     operands = SpmmOperands.from_ell(graph.pre.ell)
@@ -375,7 +394,11 @@ def pipeline_forward(
     n_layers = len(pplan.layers)
     for i, lp in enumerate(pplan.layers):
         p = params[f"layer_{i}"]
-        xw = x @ p["w"] + p["b"]                 # combination (dense)
+        prec = lp.spmm.precision
+        if prec != "f32":
+            p = quant.quantize_params({"l": p}, prec, lp.spmm.block_rows)["l"]
+        # combination (dense); quant.affine is the plain matmul at f32
+        xw = quant.affine(x, p, prec, lp.spmm.block_rows)
         x = execute(lp.spmm, operands, xw)       # aggregation (sparse)
         if i < n_layers - 1:
             x = jax.nn.relu(x)

@@ -25,6 +25,7 @@ import jax
 
 VALID_IMPLS = ("reference", "pallas", "pallas_sparse")
 VALID_LAYOUTS = ("replicated", "row_sharded")
+VALID_PRECISIONS = ("f32", "bf16", "int8")
 
 # One-time warning registry: reasons already surfaced to the user.
 _DEGRADE_WARNED: set = set()
@@ -82,6 +83,7 @@ class SpmmPlan:
     dense_layout: str = "replicated"  # dense operand: replicated | row_sharded
     out_layout: str = "replicated"    # epilogue: psum | reduce-scatter
     feature_axis: Optional[str] = None  # mesh axis splitting the F dimension
+    precision: str = "f32"            # storage precision: f32 | bf16 | int8
     effective_impl: Optional[str] = None
     degraded_reason: Optional[str] = None
 
@@ -101,6 +103,11 @@ class SpmmPlan:
                     f"unknown {name}: {getattr(self, name)} "
                     f"(expected one of {VALID_LAYOUTS})"
                 )
+        if self.precision not in VALID_PRECISIONS:
+            raise ValueError(
+                f"unknown precision: {self.precision} "
+                f"(expected one of {VALID_PRECISIONS})"
+            )
 
     # -- placement ----------------------------------------------------------
 

@@ -1,0 +1,287 @@
+"""Quantized SpMM operands: int8/bf16 storage, f32 accumulation.
+
+The FlexVector SpMM is bandwidth-bound, so bytes-per-element is the
+highest-leverage knob the planner has — halving the stored width of the
+ELL values and the layer weights beats any block-size tweak (LW-GCN
+makes the same trade on FPGA with 16-bit fixed point).  This module owns
+the storage-precision policy for the whole execution path:
+
+``f32``
+    The baseline.  Nothing is cast anywhere; the execute path is
+    bitwise-identical to a plan without a precision field.
+
+``bf16``
+    ELL values, the dense operand and the layer weights are *stored*
+    bfloat16; every kernel and the reference oracle accumulate in f32
+    (the pallas kernels already widen tiles to the accumulator dtype on
+    load, so bf16 storage is purely a traffic reduction).
+
+``int8``
+    ELL values and weights are stored as symmetric per-row-block int8
+    (scale = max-abs over the block / 127, computed per ``block_rows``
+    rows; an all-zero block gets scale 1.0 so dequantization is always a
+    plain multiply).  Activations stay bf16 — their dynamic range varies
+    per request, and a static activation scale would need calibration
+    the serving path doesn't have.  Accumulation is f32 everywhere.
+
+Each block's max-abs value quantizes *exactly* (it maps to the integer
++-127 by construction, so dequantization reproduces it bit-for-bit),
+and every other value round-trips to within half a quantization step
+(``scale / 2``).  The round-trip tests and the sharded parity tests
+(where shard boundaries re-block the scales) lean on these two bounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PRECISIONS = ("f32", "bf16", "int8")
+
+# Per-row-block scale granularity for weights and host-side ELL artifacts.
+# Matches the default SpmmPlan.block_rows so kernel-block scales are a
+# plain repeat of the quantization-block scales.
+QUANT_BLOCK_ROWS = 128
+
+# int8 symmetric range: +-127 (the -128 code is unused so the grid stays
+# symmetric and negation is exact).
+_INT8_MAX = 127.0
+
+_VALUE_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+_ACTIVATION_BYTES = {"f32": 4, "bf16": 2, "int8": 2}
+
+
+def validate_precision(precision: str) -> str:
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision: {precision} (expected one of {PRECISIONS})"
+        )
+    return precision
+
+
+def bytes_per_value(precision: str) -> int:
+    """Stored bytes per ELL value / weight element."""
+    return _VALUE_BYTES[validate_precision(precision)]
+
+
+def activation_bytes(precision: str) -> int:
+    """Stored bytes per dense-operand / activation element.
+
+    int8 precision keeps activations in bf16 (see module docstring), so
+    its activation width is 2, not 1.
+    """
+    return _ACTIVATION_BYTES[validate_precision(precision)]
+
+
+def storage_dtype(precision: str):
+    """The jnp dtype ELL values are stored in under ``precision``."""
+    validate_precision(precision)
+    return {
+        "f32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8
+    }[precision]
+
+
+def cast_dense(dense: jax.Array, precision: str) -> jax.Array:
+    """Cast the dense operand to its storage dtype (bf16 for bf16/int8)."""
+    if validate_precision(precision) == "f32":
+        return dense
+    return dense.astype(jnp.bfloat16)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def quantize_values(vals, block_rows: int = QUANT_BLOCK_ROWS):
+    """Symmetric per-row-block int8 quantization of a ``(rows, cols)`` array.
+
+    Returns ``(q, scales)``: ``q`` is int8 with the input's shape, and
+    ``scales`` is a float32 vector of length ``ceil(rows / block_rows)``
+    — one max-abs-derived scale per row block (all-zero blocks get scale
+    1.0).  Works on host numpy arrays and on traced jax arrays alike;
+    ``block_rows`` must be static either way.
+    """
+    traced = isinstance(vals, jax.core.Tracer)
+    xp = jnp if traced else np
+    v = vals if traced else np.asarray(vals, dtype=np.float32)
+    rows = v.shape[0]
+    n_blocks = _ceil_div(rows, block_rows)
+    pad = n_blocks * block_rows - rows
+    if pad:
+        v_p = xp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1))
+    else:
+        v_p = v
+    flat = v_p.reshape(n_blocks, -1)
+    maxabs = xp.max(xp.abs(flat), axis=1)
+    scales = xp.where(maxabs > 0, maxabs / _INT8_MAX, 1.0).astype(xp.float32)
+    inv = (1.0 / scales).reshape((n_blocks,) + (1,) * (v.ndim - 1))
+    inv_rows = xp.repeat(inv, block_rows, axis=0)[:rows]
+    q = xp.clip(xp.round(v * inv_rows), -_INT8_MAX, _INT8_MAX)
+    return q.astype(xp.int8), scales
+
+
+def row_scales(scales, block_rows: int, n_rows: int):
+    """Expand per-block scales to a per-row scale vector of length n_rows."""
+    traced = isinstance(scales, jax.core.Tracer)
+    xp = jnp if traced else np
+    expanded = xp.repeat(scales, block_rows)
+    if expanded.shape[0] < n_rows:  # rows beyond the last scaled block
+        pad = n_rows - expanded.shape[0]
+        expanded = xp.pad(expanded, ((0, pad),), constant_values=1.0)
+    return expanded[:n_rows]
+
+
+def dequantize_values(q, scales, block_rows: int = QUANT_BLOCK_ROWS):
+    """Exact inverse of :func:`quantize_values` up to int8 rounding."""
+    traced = isinstance(q, jax.core.Tracer) or isinstance(
+        scales, jax.core.Tracer
+    )
+    xp = jnp if traced else np
+    qa = q if traced else np.asarray(q)
+    rs = row_scales(scales, block_rows, qa.shape[0])
+    rs = rs.reshape((qa.shape[0],) + (1,) * (qa.ndim - 1))
+    return qa.astype(xp.float32) * rs
+
+
+def align_scales(scales, scale_block_rows: int, block_rows: int):
+    """Re-block per-row-block scales to a finer kernel granularity.
+
+    Returns per-``block_rows``-block scales when ``block_rows`` divides
+    ``scale_block_rows`` (every kernel block then sits inside one
+    quantization block), else ``None`` — the caller falls back to
+    dequantizing to f32 since one kernel block would need two scales.
+    """
+    if scale_block_rows == block_rows:
+        return scales
+    if scale_block_rows % block_rows == 0:
+        traced = isinstance(scales, jax.core.Tracer)
+        xp = jnp if traced else np
+        return xp.repeat(scales, scale_block_rows // block_rows)
+    return None
+
+
+# -- layer weights ----------------------------------------------------------
+
+
+def quantize_params(params, precision: str, block_rows: int = QUANT_BLOCK_ROWS):
+    """Quantize a GCN param pytree ``{layer: {"w", "b"}}`` for serving.
+
+    bf16 casts the weight matrices; int8 stores each ``w`` as symmetric
+    per-input-row-block int8 with a ``"w_scale"`` vector alongside.
+    Biases stay f32 (they are added post-accumulation and are tiny).
+    ``f32`` returns the pytree unchanged (same object — bitwise parity).
+    """
+    if validate_precision(precision) == "f32":
+        return params
+    out = {}
+    for name, layer in params.items():
+        if not (isinstance(layer, dict) and "w" in layer):
+            out[name] = layer
+            continue
+        if precision == "bf16":
+            out[name] = dict(layer, w=layer["w"].astype(jnp.bfloat16))
+        else:
+            q, scales = quantize_values(layer["w"], block_rows)
+            out[name] = dict(layer, w=q, w_scale=scales)
+    return out
+
+
+def affine(x, layer, precision: str, block_rows: int = QUANT_BLOCK_ROWS):
+    """``x @ w + b`` under ``precision``: bf16 multiplies, f32 accumulate.
+
+    ``layer`` may hold an f32/bf16 ``w`` or an int8 ``w`` + ``w_scale``
+    pair from :func:`quantize_params`.  The f32 path is a plain matmul.
+    """
+    w, b = layer["w"], layer["b"]
+    if validate_precision(precision) == "f32":
+        return x @ w + b
+    if "w_scale" in layer:
+        w = dequantize_values(w, layer["w_scale"], block_rows)
+    xw = jax.lax.dot_general(
+        x.astype(jnp.bfloat16),
+        w.astype(jnp.bfloat16),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return xw + b.astype(jnp.float32)
+
+
+# -- host-side ELL artifacts ------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedELL:
+    """A host-side quantized view of one ``TiledELL``'s value plane.
+
+    The structure arrays (``cols``/``row_map``) are shared with the
+    source container; only the values change representation.  This is
+    the unit the :class:`~repro.serve.registry.ArtifactRegistry` caches
+    (content-keyed by graph + precision) and what :meth:`operands`
+    turns back into dispatchable :class:`SpmmOperands`.
+    """
+
+    precision: str
+    cols: np.ndarray
+    vals: np.ndarray                 # int8 or bfloat16 storage
+    scales: Optional[np.ndarray]     # (n_blocks,) f32 for int8, else None
+    row_map: np.ndarray
+    n_out_rows: int
+    block_rows: int                  # scale granularity (rows per block)
+
+    @property
+    def nbytes(self) -> int:
+        n = self.cols.nbytes + self.vals.nbytes + self.row_map.nbytes
+        return n + (self.scales.nbytes if self.scales is not None else 0)
+
+    def operands(self, ell=None):
+        from repro.exec.operands import SpmmOperands  # deferred: no cycle
+
+        return SpmmOperands(
+            cols=self.cols,
+            vals=self.vals,
+            row_map=self.row_map,
+            n_out_rows=self.n_out_rows,
+            ell=ell,
+            scales=self.scales,
+            scale_block_rows=self.block_rows,
+            precision=self.precision,
+        )
+
+
+def quantize_ell(ell, precision: str, block_rows: int = QUANT_BLOCK_ROWS):
+    """Quantize a ``TiledELL``'s values into a :class:`QuantizedELL`."""
+    validate_precision(precision)
+    if precision == "f32":
+        raise ValueError("f32 needs no quantized artifact — use the TiledELL")
+    cols = np.asarray(ell.cols, dtype=np.int32)
+    rmap = np.asarray(ell.row_map, dtype=np.int32)
+    vals = np.asarray(ell.vals, dtype=np.float32)
+    if precision == "bf16":
+        q, scales = vals.astype(jnp.bfloat16), None
+    else:
+        q, scales = quantize_values(vals, block_rows)
+    return QuantizedELL(
+        precision=precision,
+        cols=cols,
+        vals=np.asarray(q),
+        scales=None if scales is None else np.asarray(scales),
+        row_map=rmap,
+        n_out_rows=ell.n_orig_rows,
+        block_rows=block_rows,
+    )
+
+
+def logit_error(ref, test) -> float:
+    """Relative max-abs error of ``test`` vs the f32 reference logits.
+
+    Normalized by the reference's max magnitude so the accuracy budget is
+    scale-free across datasets.
+    """
+    ref = np.asarray(ref, dtype=np.float32)
+    test = np.asarray(test, dtype=np.float32)
+    denom = max(float(np.max(np.abs(ref))), 1e-12)
+    return float(np.max(np.abs(test - ref))) / denom

@@ -48,6 +48,8 @@ immune to jit caching.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -59,6 +61,7 @@ from repro.dist.collectives import (
     segment_psum,
     segment_reduce_scatter,
 )
+from repro.exec import quant
 from repro.exec.operands import SpmmOperands, shard_operands
 from repro.exec.plan import SpmmPlan
 
@@ -68,21 +71,25 @@ def _round_up(x: int, q: int) -> int:
 
 
 def _record_traffic(plan: SpmmPlan, n_out: int, n_out_pad: int, f: int,
-                    dense_rows: int, dtype_bytes: int) -> None:
+                    dense_rows: int, act_bytes: int,
+                    acc_bytes: int = 4) -> None:
     """Ledger entries for one dispatch: epilogue collective bytes
     (per-device ring arithmetic) + activation writeback under the chosen
-    output layout."""
+    output layout.  The all-gathered dense operand and the activation
+    writeback move at the storage width (``act_bytes`` — 2 under
+    bf16/int8 precision); the reduction collectives move the f32
+    accumulator partials (``acc_bytes``)."""
     n = plan.n_shards
     if n > 1 and plan.dense_layout == "row_sharded":
         LEDGER.record(
-            "all_gather", (n - 1) / n * dense_rows * f * dtype_bytes)
+            "all_gather", (n - 1) / n * dense_rows * f * act_bytes)
     if n > 1 and plan.out_layout == "row_sharded":
         LEDGER.record(
-            "reduce_scatter", (n - 1) / n * n_out_pad * f * dtype_bytes)
-        LEDGER.record("activation_dram", n_out_pad * f * dtype_bytes, n=0)
+            "reduce_scatter", (n - 1) / n * n_out_pad * f * acc_bytes)
+        LEDGER.record("activation_dram", n_out_pad * f * act_bytes, n=0)
     elif n > 1:
-        LEDGER.record("psum", 2.0 * (n - 1) / n * n_out * f * dtype_bytes)
-        LEDGER.record("activation_dram", n * n_out * f * dtype_bytes, n=0)
+        LEDGER.record("psum", 2.0 * (n - 1) / n * n_out * f * acc_bytes)
+        LEDGER.record("activation_dram", n * n_out * f * act_bytes, n=0)
 
 
 def execute_sharded(
@@ -99,6 +106,22 @@ def execute_sharded(
     real rows (the next layer's combination matmul) is safe.
     """
     plan = plan.resolve(schedulable=operands.schedulable)
+    if operands.precision != "f32":
+        # Pre-quantized operands: the shard boundaries slice rows at
+        # nnz-balanced (non-scale-block-aligned) offsets, so dequantize
+        # exactly to f32 first and re-quantize per shard below.  Exact
+        # for power-of-two values; otherwise within one int8 ulp.
+        if operands.precision == "int8":
+            vals_f = quant.dequantize_values(
+                np.asarray(operands.vals), np.asarray(operands.scales),
+                operands.scale_block_rows,
+            )
+        else:
+            vals_f = np.asarray(operands.vals, dtype=np.float32)
+        operands = dataclasses.replace(
+            operands, vals=vals_f, scales=None, scale_block_rows=None,
+            precision="f32",
+        )
     mesh, axis, f_axis = plan.mesh, plan.data_axis, plan.feature_axis
     n_shards = plan.n_shards
     m_shards = plan.n_feature_shards
@@ -134,8 +157,9 @@ def execute_sharded(
         )
 
     dense = jnp.asarray(dense)
+    if plan.precision != "f32":
+        dense = quant.cast_dense(dense, plan.precision)
     f = dense.shape[1]
-    dtype_bytes = dense.dtype.itemsize
     # Feature sharding needs F divisible by the feature-axis width; pad
     # host-side (zero columns contribute zero products) and trim on exit.
     f_pad_m = _round_up(f, m_shards)
@@ -143,10 +167,23 @@ def execute_sharded(
         dense = jnp.pad(dense, ((0, 0), (0, f_pad_m - f)))
     f_local = f_pad_m // m_shards
     cols = jnp.asarray(cols_h)
-    vals = jnp.asarray(vals_h, dtype=dense.dtype)
+    scales = None
+    if plan.precision == "int8":
+        # Quantize the shard-major layout: every shard slice is padded to
+        # a block_rows multiple, so each shard's scale run is contiguous
+        # and shards with the same row partitioning as the values.
+        q_h, s_h = quant.quantize_values(vals_h, plan.block_rows)
+        vals = jnp.asarray(q_h)
+        scales = jnp.asarray(s_h, jnp.float32)
+    else:
+        vals = jnp.asarray(vals_h, dtype=dense.dtype)
     rmap = jnp.asarray(rmap_h)
     _record_traffic(plan, n_out, n_out_pad, f_pad_m, dense.shape[0],
-                    dtype_bytes)
+                    act_bytes=dense.dtype.itemsize)
+    from repro.exec.dispatch import record_spmm_dram  # deferred: no cycle
+
+    record_spmm_dram(plan, cols_h.shape[0], cols_h.shape[1],
+                     dense.shape[0], f_pad_m, n_out)
 
     row_spec = axis if n_shards > 1 else None
     dense_spec = P(axis if row_sharded_dense else None,
@@ -168,26 +205,39 @@ def execute_sharded(
             d = jax.lax.all_gather(d, axis, axis=0, tiled=True)
         return d
 
+    # Optional per-row-block scale operand (int8): sharded like the other
+    # row arrays — every shard's scale run is contiguous in shard-major
+    # layout, so the same P(row_spec) partitioning applies.
+    sc_specs = (P(row_spec),) if scales is not None else ()
+    sc_args = (scales,) if scales is not None else ()
+
     if impl == "reference":
         from repro.exec.dispatch import _sub_row_products_ref
 
-        def body(c, v, m, d):
+        def body(c, v, *rest):
+            *sc, m, d = rest
+            if sc:
+                v = quant.dequantize_values(v, sc[0], plan.block_rows)
+            elif plan.precision != "f32":
+                v = v.astype(jnp.float32)  # f32 accumulation, as the kernels
             return epilogue(_sub_row_products_ref(c, v, prologue(d)), m)
 
         fn = shard_map(
             body,
             mesh=mesh,
-            in_specs=(P(row_spec), P(row_spec), P(row_spec), dense_spec),
+            in_specs=(P(row_spec), P(row_spec)) + sc_specs
+            + (P(row_spec), dense_spec),
             out_specs=out_spec,
             check_rep=False,  # psum replicates; pallas has no rep rule anyway
         )
-        return fn(cols, vals, rmap, dense)[:, :f]
+        return fn(cols, vals, *sc_args, rmap, dense)[:, :f]
 
     from repro.kernels import flexvector_spmm as fv  # deferred, as in dispatch
 
     if impl == "pallas":
 
-        def body(c, v, m, d):
+        def body(c, v, *rest):
+            *sc, m, d = rest
             r_loc = c.shape[0]
             c, v, d, _ = fv.pad_operands(
                 c, v, prologue(d), plan.block_rows, plan.block_k, plan.block_f
@@ -201,17 +251,19 @@ def execute_sharded(
                 block_f=plan.block_f,
                 out_dtype=plan.out_dtype,
                 interpret=plan.interpret,
+                scales=sc[0] if sc else None,
             )[:r_loc, :f_local]
             return epilogue(sub, m)
 
         fn = shard_map(
             body,
             mesh=mesh,
-            in_specs=(P(row_spec), P(row_spec), P(row_spec), dense_spec),
+            in_specs=(P(row_spec), P(row_spec)) + sc_specs
+            + (P(row_spec), dense_spec),
             out_specs=out_spec,
             check_rep=False,
         )
-        return fn(cols, vals, rmap, dense)[:, :f]
+        return fn(cols, vals, *sc_args, rmap, dense)[:, :f]
 
     # pallas_sparse: per-shard block-skipping schedules, padded to one length.
     if n_shards > 1:
@@ -232,7 +284,8 @@ def execute_sharded(
         kb = grid.pairs[:, 1].astype(np.int32)
         first = grid.first_k.astype(np.int32)
 
-    def body(rb_s, kb_s, first_s, c, v, m, d):
+    def body(rb_s, kb_s, first_s, c, v, *rest):
+        *sc, m, d = rest
         r_loc = c.shape[0]
         c, v, d, _ = fv.pad_operands(
             c, v, prologue(d), plan.block_rows, plan.block_k, plan.block_f
@@ -249,6 +302,7 @@ def execute_sharded(
             block_f=plan.block_f,
             out_dtype=plan.out_dtype,
             interpret=plan.interpret,
+            scales=sc[0] if sc else None,
         )[:r_loc, :f_local]
         return epilogue(sub, m)
 
@@ -256,13 +310,13 @@ def execute_sharded(
         body,
         mesh=mesh,
         in_specs=(P(row_spec), P(row_spec), P(row_spec), P(row_spec),
-                  P(row_spec), P(row_spec), dense_spec),
+                  P(row_spec)) + sc_specs + (P(row_spec), dense_spec),
         out_specs=out_spec,
         check_rep=False,
     )
     return fn(
         jnp.asarray(rb), jnp.asarray(kb), jnp.asarray(first), cols, vals,
-        rmap, dense,
+        *sc_args, rmap, dense,
     )[:, :f]
 
 

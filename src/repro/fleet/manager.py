@@ -85,13 +85,35 @@ class FleetEstimator:
 
 class FleetManager:
     """Servable registry + residency budget (weighted LRU of loaded
-    servables)."""
+    servables).
 
-    def __init__(self, *, capacity_units: float = 8.0):
+    ``predictive_unload`` (opt-in) replaces pure-LRU eviction with an
+    arrival-rate-informed choice: each servable's instantaneous arrival
+    rate (1 / inter-arrival gap, folded through the same
+    :class:`~repro.fleet.servable.EwmaEstimator` machinery the cost
+    estimators use) breaks residency ties, so a bursty-but-recent
+    servable is not evicted ahead of one whose traffic is dying.  The
+    victim is the resident servable with the *lowest* smoothed arrival
+    rate; equal rates fall back to LRU order, and with no recorded
+    arrivals every rate is 0.0 — pure LRU, the historical behaviour.
+    ``clock`` is injectable for deterministic tests.
+    """
+
+    def __init__(self, *, capacity_units: float = 8.0,
+                 predictive_unload: bool = False,
+                 clock: Optional[Clock] = None):
+        from repro.fleet.servable import EwmaEstimator
+
         self._servables: Dict[str, Servable] = {}
         self._loaded = LruDict(capacity_units, on_evict=self._evict)
         self.loads = 0
         self.unloads = 0
+        self.predictive_unload = predictive_unload
+        self.clock = clock or RealClock()
+        # Per-servable arrival rate (req/s): cold keys price 0.0, so a
+        # never-routed servable is always the preferred victim.
+        self._rates = EwmaEstimator(lambda key, batch: 0.0)
+        self._last_arrival: Dict[str, float] = {}
 
     def register(self, servable: Servable) -> Servable:
         if servable.key in self._servables:
@@ -121,17 +143,53 @@ class FleetManager:
 
         A first touch (or a touch after eviction) calls ``load()`` —
         warmup-compiling the servable's executable grid — and may evict
-        the least-recently-used resident servable(s) to stay within
-        ``capacity_units``.  A resident servable is just a recency touch.
+        resident servable(s) to stay within ``capacity_units``: the
+        least-recently-used by default, the lowest-arrival-rate resident
+        under ``predictive_unload``.  A resident servable is just a
+        recency touch.
         """
         sv = self.servable(key)
+        self._record_arrival(key)
         if key not in self._loaded:
             sv.load()
             self.loads += 1
+            if self.predictive_unload:
+                self._make_room(sv.cost_units())
             self._loaded.put(key, sv, weight=sv.cost_units())
         else:
             self._loaded.get(key)      # touch recency
         return sv
+
+    def arrival_rate(self, key: str) -> float:
+        """Smoothed arrival rate (req/s) for ``key``; 0.0 before the
+        second arrival (one arrival has no inter-arrival gap)."""
+        return self._rates.estimate(key, 1)
+
+    def _record_arrival(self, key: str) -> None:
+        now = self.clock.now()
+        last = self._last_arrival.get(key)
+        if last is not None and now > last:
+            self._rates.observe(key, 1, 1.0 / (now - last))
+        self._last_arrival[key] = now
+
+    def _make_room(self, weight: float) -> None:
+        """Predictive eviction: pop the resident with the lowest smoothed
+        arrival rate (LRU position breaks ties) until ``weight`` fits.
+
+        ``LruDict.pop`` does not fire ``on_evict`` — it is a plain
+        removal — so the unload is invoked explicitly here; the later
+        ``put`` then finds enough headroom and never triggers the LRU
+        fallback path.
+        """
+        while (len(self._loaded) > 0
+               and self._loaded.total_weight + weight
+               > self._loaded.capacity):
+            order = {k: i for i, k in enumerate(self._loaded.keys())}
+            victim = min(order, key=lambda k: (self.arrival_rate(k),
+                                               order[k]))
+            evicted = self._loaded.pop(victim)
+            self._loaded.evictions += 1
+            self._evict(victim, evicted)
 
     def profile(self, key: str) -> BatchProfile:
         return self.servable(key).profile()
@@ -326,7 +384,8 @@ def build_servable(spec: dict) -> Servable:
         engine_kw = {
             k: spec[k]
             for k in ("hidden_dim", "spmm_impl", "max_batch", "max_seeds",
-                      "fanout", "hops", "base_bucket_nodes")
+                      "fanout", "hops", "base_bucket_nodes", "precision",
+                      "accuracy_budget")
             if k in spec
         }
         engine = ServeEngine.from_dataset(spec["dataset"], **engine_kw)
@@ -358,7 +417,9 @@ def fleet_from_config(
     section optional except ``servables``.
     """
     manager = FleetManager(
-        capacity_units=float(config.get("capacity_units", 8.0)))
+        capacity_units=float(config.get("capacity_units", 8.0)),
+        predictive_unload=bool(config.get("predictive_unload", False)),
+        clock=clock)
     for spec in config["servables"]:
         manager.register(build_servable(spec))
     tenants = TenantTable(

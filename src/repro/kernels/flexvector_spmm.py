@@ -81,6 +81,48 @@ def _dense_grid_kernel(cols_ref, vals_ref, dense_ref, out_ref, *, block_k):
     )
 
 
+def _dense_grid_kernel_scaled(
+    cols_ref, vals_ref, scales_ref, dense_ref, out_ref, *, block_k
+):
+    """Dense-grid kernel over int8 values: dequantize on load.
+
+    ``scales_ref`` is the (1, 1) per-row-block scale slab; the expanded
+    block is widened to the f32 accumulator dtype by ``_expand_block``
+    and multiplied by its block scale before hitting the MXU, so int8
+    lives only on the DRAM->VMEM path.
+    """
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    acc = _acc_dtype(out_ref.dtype)
+    a_blk = _expand_block(
+        cols_ref[...], vals_ref[...], kb * block_k, block_k, acc
+    )
+    a_blk = a_blk * scales_ref[0, 0].astype(acc)
+    out_ref[...] += jax.lax.dot_general(
+        a_blk,
+        dense_ref[...].astype(acc),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype,
+    )
+
+
+def _block_scales_2d(scales, r: int, block_rows: int) -> jax.Array:
+    """Shape per-row-block scales for the kernel: (r // block_rows, 1) f32.
+
+    Pads with 1.0 for trailing all-padding row blocks (their values are
+    zero, so the scale is immaterial but must exist for the BlockSpec).
+    """
+    n_rb = r // block_rows
+    s = jnp.asarray(scales, jnp.float32).reshape(-1)
+    if s.shape[0] < n_rb:
+        s = jnp.pad(s, ((0, n_rb - s.shape[0]),), constant_values=1.0)
+    return s[:n_rb].reshape(n_rb, 1)
+
+
 def spmm_ell_dense_grid(
     cols: jax.Array,   # (R, tau) int32, PAD_COL = -1 padding
     vals: jax.Array,   # (R, tau)
@@ -91,8 +133,14 @@ def spmm_ell_dense_grid(
     block_f: int = 128,
     out_dtype=None,
     interpret: Optional[bool] = None,
+    scales: Optional[jax.Array] = None,  # (r // block_rows,) f32 dequant
 ) -> jax.Array:
-    """Paper-faithful baseline schedule: full grid, masked expansion."""
+    """Paper-faithful baseline schedule: full grid, masked expansion.
+
+    ``scales`` switches on the int8 dequantize-on-load path: one f32
+    scale per ``block_rows`` row block, multiplied into the expanded
+    block inside the kernel (accumulation stays f32).
+    """
     r, tau = cols.shape
     k, f = dense.shape
     if r % block_rows or k % block_k or f % block_f:
@@ -100,20 +148,32 @@ def spmm_ell_dense_grid(
     out_dtype = out_dtype or _acc_dtype(dense.dtype)
     interpret = _default_interpret(interpret)
     grid = (f // block_f, r // block_rows, k // block_k)
+    out_shape = jax.ShapeDtypeStruct((r, f), out_dtype)
+    out_specs = pl.BlockSpec((block_rows, block_f), lambda fi, rb, kb: (rb, fi))
+    ell_spec = pl.BlockSpec((block_rows, tau), lambda fi, rb, kb: (rb, 0))
+    dense_spec = pl.BlockSpec((block_k, block_f), lambda fi, rb, kb: (kb, fi))
+    if scales is None:
+        return pl.pallas_call(
+            functools.partial(_dense_grid_kernel, block_k=block_k),
+            grid=grid,
+            in_specs=[ell_spec, ell_spec, dense_spec],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(cols, vals, dense)
     return pl.pallas_call(
-        functools.partial(_dense_grid_kernel, block_k=block_k),
+        functools.partial(_dense_grid_kernel_scaled, block_k=block_k),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows, tau), lambda fi, rb, kb: (rb, 0)),
-            pl.BlockSpec((block_rows, tau), lambda fi, rb, kb: (rb, 0)),
-            pl.BlockSpec((block_k, block_f), lambda fi, rb, kb: (kb, fi)),
+            ell_spec,
+            ell_spec,
+            pl.BlockSpec((1, 1), lambda fi, rb, kb: (rb, 0)),
+            dense_spec,
         ],
-        out_specs=pl.BlockSpec(
-            (block_rows, block_f), lambda fi, rb, kb: (rb, fi)
-        ),
-        out_shape=jax.ShapeDtypeStruct((r, f), out_dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(cols, vals, dense)
+    )(cols, vals, _block_scales_2d(scales, r, block_rows), dense)
 
 
 def _sparse_grid_kernel(
@@ -138,6 +198,29 @@ def _sparse_grid_kernel(
     )
 
 
+def _sparse_grid_kernel_scaled(
+    rb_ids_ref, kb_ids_ref, first_ref, cols_ref, vals_ref, scales_ref,
+    dense_ref, out_ref, *, block_k,
+):
+    s = pl.program_id(1)
+
+    @pl.when(first_ref[s] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    acc = _acc_dtype(out_ref.dtype)
+    a_blk = _expand_block(
+        cols_ref[...], vals_ref[...], kb_ids_ref[s] * block_k, block_k, acc
+    )
+    a_blk = a_blk * scales_ref[0, 0].astype(acc)
+    out_ref[...] += jax.lax.dot_general(
+        a_blk,
+        dense_ref[...].astype(acc),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype,
+    )
+
+
 def spmm_ell_sparse_grid(
     cols: jax.Array,
     vals: jax.Array,
@@ -151,12 +234,14 @@ def spmm_ell_sparse_grid(
     block_f: int = 128,
     out_dtype=None,
     interpret: Optional[bool] = None,
+    scales: Optional[jax.Array] = None,  # (r // block_rows,) f32 dequant
 ) -> jax.Array:
     """Block-skipping schedule driven by a scalar-prefetched pair list.
 
     The (rb, kb) pair list must keep all visits of one row block
     consecutive (``plan_kernel_grid`` guarantees it) so the output block is
-    revisited contiguously while it stays resident in VMEM.
+    revisited contiguously while it stays resident in VMEM.  ``scales``
+    enables int8 dequantize-on-load, as in :func:`spmm_ell_dense_grid`.
     """
     r, tau = cols.shape
     k, f = dense.shape
@@ -166,30 +251,49 @@ def spmm_ell_sparse_grid(
     interpret = _default_interpret(interpret)
     n_steps = int(rb_ids.shape[0])
     grid = (f // block_f, n_steps)
+    ell_spec = pl.BlockSpec(
+        (block_rows, tau), lambda fi, s, rb, kb, fs: (rb[s], 0)
+    )
+    dense_spec = pl.BlockSpec(
+        (block_k, block_f), lambda fi, s, rb, kb, fs: (kb[s], fi)
+    )
+    out_specs = pl.BlockSpec(
+        (block_rows, block_f), lambda fi, s, rb, kb, fs: (rb[s], fi)
+    )
+    out_shape = jax.ShapeDtypeStruct((r, f), out_dtype)
+    if scales is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[ell_spec, ell_spec, dense_spec],
+            out_specs=out_specs,
+        )
+        return pl.pallas_call(
+            functools.partial(_sparse_grid_kernel, block_k=block_k),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(rb_ids, kb_ids, first, cols, vals, dense)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(
-                (block_rows, tau), lambda fi, s, rb, kb, fs: (rb[s], 0)
-            ),
-            pl.BlockSpec(
-                (block_rows, tau), lambda fi, s, rb, kb, fs: (rb[s], 0)
-            ),
-            pl.BlockSpec(
-                (block_k, block_f), lambda fi, s, rb, kb, fs: (kb[s], fi)
-            ),
+            ell_spec,
+            ell_spec,
+            pl.BlockSpec((1, 1), lambda fi, s, rb, kb, fs: (rb[s], 0)),
+            dense_spec,
         ],
-        out_specs=pl.BlockSpec(
-            (block_rows, block_f), lambda fi, s, rb, kb, fs: (rb[s], fi)
-        ),
+        out_specs=out_specs,
     )
     return pl.pallas_call(
-        functools.partial(_sparse_grid_kernel, block_k=block_k),
+        functools.partial(_sparse_grid_kernel_scaled, block_k=block_k),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((r, f), out_dtype),
+        out_shape=out_shape,
         interpret=interpret,
-    )(rb_ids, kb_ids, first, cols, vals, dense)
+    )(
+        rb_ids, kb_ids, first, cols, vals,
+        _block_scales_2d(scales, r, block_rows), dense,
+    )
 
 
 def _default_interpret(interpret: Optional[bool]) -> bool:

@@ -27,6 +27,7 @@ def flexvector_spmm(
     hot_k_first: bool = True,
     out_dtype=None,
     interpret: Optional[bool] = None,
+    precision: str = "f32",
 ) -> jax.Array:
     """Compute the sub-row products ``ell @ dense`` with the Pallas kernel.
 
@@ -35,8 +36,13 @@ def flexvector_spmm(
     The launch schedule comes from ``plan_kernel_grid`` — the hierarchical
     dataflow plan (k-innermost output-stationary, hot k-tiles first,
     empty (row-block, k-tile) cells skipped when ``skip_empty``).
+    ``precision`` selects the storage width (``exec.quant`` semantics):
+    bf16 casts values and the dense operand, int8 quantizes the values
+    per ``block_rows`` row block and dequantizes on load — either way
+    the kernel accumulates in f32.
     """
-    from repro.exec import SpmmPlan, sub_row_products
+    from repro.exec import SpmmPlan, quant, sub_row_products
+    import jax.numpy as jnp
 
     plan = SpmmPlan(
         impl="pallas_sparse" if skip_empty else "pallas",
@@ -46,9 +52,15 @@ def flexvector_spmm(
         interpret=interpret,
         hot_k_first=hot_k_first,
         out_dtype=out_dtype,
+        precision=precision,
     ).resolve(schedulable=True)
-    import jax.numpy as jnp
-
+    vals, scales = jnp.asarray(ell.vals), None
+    if precision == "bf16":
+        vals = vals.astype(jnp.bfloat16)
+    elif precision == "int8":
+        q, s = quant.quantize_values(ell.vals, block_rows)
+        vals, scales = jnp.asarray(q), jnp.asarray(s)
+    dense = quant.cast_dense(dense, precision)
     return sub_row_products(
-        plan, jnp.asarray(ell.cols), jnp.asarray(ell.vals), dense, ell=ell
+        plan, jnp.asarray(ell.cols), vals, dense, ell=ell, scales=scales
     )

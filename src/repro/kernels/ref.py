@@ -34,6 +34,24 @@ def spmm_ell_ref(cols: jax.Array, vals: jax.Array, dense: jax.Array,
     return (gathered * w[..., None]).sum(axis=1)
 
 
+def spmm_ell_quant_ref(cols: jax.Array, q_vals: jax.Array,
+                       scales: jax.Array, dense: jax.Array,
+                       block_rows: int) -> jax.Array:
+    """Quantize→dequantize oracle for the int8 sub-row product path.
+
+    Dequantizes the symmetric per-row-block int8 values exactly (f32
+    multiply by the block scale) and runs the f32 reference; kernels
+    loading int8 tiles and dequantizing on load must match this within
+    accumulation-order tolerance.
+    """
+    r = cols.shape[0]
+    rs = jnp.repeat(jnp.asarray(scales, jnp.float32), block_rows)
+    if rs.shape[0] < r:
+        rs = jnp.pad(rs, ((0, r - rs.shape[0]),), constant_values=1.0)
+    vals = q_vals.astype(jnp.float32) * rs[:r, None]
+    return spmm_ell_ref(cols, vals, dense, out_dtype=jnp.float32)
+
+
 def expand_block_ref(cols: jax.Array, vals: jax.Array, kb_base: int,
                      block_k: int, acc_dtype=jnp.float32) -> jax.Array:
     """Oracle for the in-kernel one-hot block expansion."""

@@ -39,6 +39,8 @@ def build_engine(args) -> ServeEngine:
         mesh=mesh,
         autoplan=args.autoplan,
         ladder_growth=growth,
+        precision=args.precision,
+        accuracy_budget=args.accuracy_budget,
     )
 
 
@@ -188,6 +190,17 @@ def main() -> None:
                          "fanout/hops (uncapped fanout warms every rung)")
     ap.add_argument("--impl", default="reference",
                     choices=["reference", "pallas", "pallas_sparse"])
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16", "int8", "auto"],
+                    help="serving numerics: f32 keeps the baseline "
+                         "bit-identical; bf16/int8 quantize the ELL values "
+                         "and weights (f32 accumulate); auto measures the "
+                         "full-graph logit error per precision at warmup "
+                         "and picks the cheapest one within "
+                         "--accuracy-budget per bucket rung")
+    ap.add_argument("--accuracy-budget", type=float, default=0.05,
+                    help="max relative logit error a non-f32 precision may "
+                         "introduce before --precision auto rejects it")
     ap.add_argument("--autoplan", action="store_true",
                     help="pick a per-bucket SpMM plan (impl + block sizes) "
                          "with the repro.plan cost model at warmup instead "
@@ -245,6 +258,15 @@ def main() -> None:
           f"{[ (b.nodes, b.rows) for b in engine.batcher.ladder.entries ]}; "
           f"impl {impl_note}; mesh data={args.mesh}; "
           f"registry builds={reg.builds} disk_hits={reg.disk_hits}")
+    if args.precision != "f32":
+        errs = {p: round(e, 5)
+                for p, e in sorted(engine.precision_errors.items())}
+        picks = {b.rows: engine.batcher.precision_for_bucket(b)
+                 for b in engine.batcher.ladder.entries}
+        print(f"[precision] requested {args.precision} "
+              f"(budget {args.accuracy_budget}); measured errors {errs}; "
+              f"per-rung picks {picks}; "
+              f"full-graph {engine.resolved_precision}")
     if args.autoplan:
         for (bucket, _), bplan in sorted(
                 engine.batcher._bucket_plans.items()):

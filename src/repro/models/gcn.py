@@ -90,6 +90,7 @@ def gcn_forward(
     plan=None,
     mesh=None,
     out_layout: str = "replicated",
+    precision: str = "f32",
 ) -> jax.Array:
     """Full-graph forward pass.
 
@@ -113,9 +114,18 @@ def gcn_forward(
     the output activation left row-sharded (padded height
     ``round_up(n_nodes, width)``, no inverse permutation) — the form a
     following sharded stage consumes.
+
+    ``precision`` (``f32`` | ``bf16`` | ``int8``, ``exec.quant``
+    semantics) quantizes the layer weights and stamps the SpMM plans, so
+    both halves of each layer — combination matmul and aggregation SpMM
+    — run at the reduced storage width with f32 accumulation.  ``f32``
+    (the default) leaves everything bitwise-untouched; a ``plan`` that
+    already carries a non-f32 precision (autoplan's choice) is honored.
     """
+    from repro.exec import quant
     from repro.exec.pipeline import GcnPipelinePlan, pipeline_forward
 
+    quant.validate_precision(precision)
     if isinstance(plan, GcnPipelinePlan):
         return pipeline_forward(params, graph, features, plan)
     if isinstance(plan, str):
@@ -125,13 +135,18 @@ def gcn_forward(
 
         pplan = plan_pipeline(
             cfg, graph.pre.ell, mesh=mesh, n_layers=len(params),
-            out_layout=out_layout,
+            out_layout=out_layout, precision=precision,
         )
         return pipeline_forward(params, graph, features, pplan)
     if plan is None:
         from repro.exec import plan_for_config
 
         plan = plan_for_config(cfg, mesh=mesh)
+    if precision != "f32" and plan.precision != precision:
+        plan = dataclasses.replace(plan, precision=precision)
+    prec = plan.precision
+    if prec != "f32":
+        params = quant.quantize_params(params, prec, plan.block_rows)
     # A static plan applies uniformly to every layer; a row-sharded output
     # request swaps only the final epilogue (meaningful on a >1-wide data
     # axis — on one device the layouts coincide and the standard replicated
@@ -145,7 +160,8 @@ def gcn_forward(
         layer_plan = plan
         if shard_out and i == n_layers - 1:
             layer_plan = dataclasses.replace(plan, out_layout="row_sharded")
-        xw = x @ p["w"] + p["b"]                    # combination (dense)
+        # combination (dense); quant.affine is the plain matmul at f32
+        xw = quant.affine(x, p, prec, plan.block_rows)
         x = spmm_ell(graph.pre.ell, xw, plan=layer_plan)  # aggregation
         if i < n_layers - 1:
             x = jax.nn.relu(x)

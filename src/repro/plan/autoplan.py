@@ -38,7 +38,8 @@ class PlanChoice:
         width = p.n_shards
         return (
             f"{p.impl} rows={p.block_rows} k={p.block_k} f={p.block_f} "
-            f"data={width} (bound {self.cost.seconds:.3e}s vs static "
+            f"data={width} prec={p.precision} "
+            f"(bound {self.cost.seconds:.3e}s vs static "
             f"{self.static_cost.seconds:.3e}s)"
         )
 
@@ -74,6 +75,9 @@ def choose_plan(
     dtype_bytes: int = 4,
     device: cost_mod.DeviceModel = cost_mod.TPU_V5E,
     schedulable: Optional[bool] = None,
+    precisions: Sequence[str] = ("f32",),
+    precision_errors: Optional[dict] = None,
+    accuracy_budget: Optional[float] = None,
 ) -> PlanChoice:
     """Pick the argmin-cost plan for one graph + device budget.
 
@@ -85,8 +89,30 @@ def choose_plan(
     ``schedulable`` says whether the execution context can plan the
     ``pallas_sparse`` block-skipping grid host-side; when it cannot, that
     impl is excluded instead of being costed as something it will not run.
+
+    ``precisions`` adds a storage-precision search dimension (``f32`` |
+    ``bf16`` | ``int8``, ``exec.quant`` semantics).  A non-f32 precision
+    is a candidate only when its *measured* end-to-end logit error
+    (``precision_errors[p]``, e.g. from ``exec.quant.logit_error`` on the
+    dataset at hand) fits ``accuracy_budget``; with a budget but no
+    measurement the candidate is excluded — an unmeasured precision can
+    never be certified, so autoplan never violates the budget.  f32 has
+    error 0.0 by definition and is always admissible; the static f32
+    default stays the first candidate, preserving the never-worse
+    invariant.
     """
     stats = _as_stats(graph)
+    errs = dict(precision_errors or {})
+    errs.setdefault("f32", 0.0)
+
+    def admissible(p: str) -> bool:
+        if p == "f32":
+            return True
+        if accuracy_budget is None:
+            return True
+        return p in errs and errs[p] <= accuracy_budget
+
+    precs = tuple(p for p in precisions if admissible(p)) or ("f32",)
     if schedulable is None:
         schedulable = stats.ell is not None
 
@@ -140,10 +166,11 @@ def choose_plan(
             _imb_cache[width] = hit
         return hit
 
-    def score(impl, br, bk, bf, width):
+    def score(impl, br, bk, bf, width, precision="f32"):
         return cost_mod.spmm_cost(
             stats, feature_dim, impl=impl, block_rows=br, block_k=bk,
             block_f=bf, n_shards=width, dtype_bytes=dtype_bytes,
+            precision=precision,
             shard_imbalance=width_imbalance(width), device=device,
         )
 
@@ -151,7 +178,7 @@ def choose_plan(
     static_impl = base_impl if (
         schedulable or base_impl != "pallas_sparse") else "pallas"
     static_cost = score(static_impl, *base_blocks, mesh_width)
-    best = (static_impl, *base_blocks, mesh_width)
+    best = (static_impl, *base_blocks, mesh_width, "f32")
     best_cost = static_cost
 
     n_cand = 1
@@ -160,12 +187,14 @@ def choose_plan(
             for bk in blocks_for(base_blocks[1]):
                 for bf in blocks_for(base_blocks[2]):
                     for w in widths:
-                        n_cand += 1
-                        c = score(impl, br, bk, bf, w)
-                        if c.seconds < best_cost.seconds:
-                            best, best_cost = (impl, br, bk, bf, w), c
+                        for prec in precs:
+                            n_cand += 1
+                            c = score(impl, br, bk, bf, w, prec)
+                            if c.seconds < best_cost.seconds:
+                                best = (impl, br, bk, bf, w, prec)
+                                best_cost = c
 
-    impl, br, bk, bf, width = best
+    impl, br, bk, bf, width, precision = best
     hot_k_first = True
     if impl == "pallas_sparse" and stats.ell is not None:
         hot_k_first = choose_hot_k_first(
@@ -181,6 +210,7 @@ def choose_plan(
     plan = SpmmPlan(
         impl=impl, block_rows=br, block_k=bk, block_f=bf,
         interpret=interpret, mesh=chosen_mesh, hot_k_first=hot_k_first,
+        precision=precision,
     )
     static_plan = SpmmPlan(
         impl=base_impl, block_rows=base_blocks[0], block_k=base_blocks[1],

@@ -45,6 +45,13 @@ def _round_up(x: int, q: int) -> int:
     return _ceil_div(max(x, 0), q) * q
 
 
+# Storage widths of the ``exec.quant`` precisions: the stored value width
+# and the activation (dense operand / writeback) width — int8 keeps
+# activations in bf16, hence the asymmetry.
+_PRECISION_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+_PRECISION_ACT_BYTES = {"f32": 4, "bf16": 2, "int8": 2}
+
+
 # ---------------------------------------------------------------------------
 # Device model
 # ---------------------------------------------------------------------------
@@ -68,6 +75,18 @@ class DeviceModel:
     dense_buffer_bytes: int = 2048       # SRAM-energy anchor (HWConfig)
     sparse_buffer_bytes: int = 256
     step_overhead_s: float = 2e-9
+
+    def bytes_per_element(self, dtype) -> int:
+        """Stored bytes per element, the one element-size helper every
+        traffic term routes through (no more hardcoded f32 fours).
+
+        Accepts ``exec.quant`` precision names (``"f32"``/``"bf16"``/
+        ``"int8"``) and anything ``np.dtype`` understands (including
+        ml_dtypes' bfloat16 class).
+        """
+        if isinstance(dtype, str) and dtype in _PRECISION_BYTES:
+            return _PRECISION_BYTES[dtype]
+        return int(np.dtype(dtype).itemsize)
 
 
 TPU_V5E = DeviceModel()
@@ -288,6 +307,7 @@ def spmm_cost(
     shard_imbalance: float = 1.0,
     dtype_bytes: int = 4,
     idx_bytes: int = 4,
+    precision: str = "f32",
     device: DeviceModel = TPU_V5E,
 ) -> CostBreakdown:
     """Traffic/energy/time estimate of ``A @ D`` under one plan.
@@ -309,6 +329,13 @@ def spmm_cost(
     dense operand.  ``shard_imbalance`` (``split_imbalance`` of the chosen
     sub-row split, >= 1.0) scales the per-device compute/memory terms: the
     roofline waits on the heaviest shard, not the mean one.
+
+    ``precision`` sizes every traffic term with the ``exec.quant``
+    storage widths: stored ELL values at 1 (int8) or 2 (bf16) bytes plus
+    the int8 per-row-block scale vector, activations (the dense operand,
+    the writeback, the all-gathered prologue) at 2 bytes under bf16/int8.
+    The reduction collectives still move f32 accumulator partials
+    (``dtype_bytes``), matching what ``exec.sharded`` actually psums.
     """
     f = max(feature_dim, 1)
     r_pad = _round_up(stats.padded_rows, block_rows)
@@ -317,13 +344,19 @@ def spmm_cost(
     n_rb = _ceil_div(r_pad, block_rows)
     n_kb = _ceil_div(k_pad, block_k)
     n_fb = _ceil_div(f_pad, block_f)
-    ell_entry_bytes = idx_bytes + dtype_bytes
+    if precision == "f32":
+        val_bytes, act_bytes = dtype_bytes, dtype_bytes
+    else:
+        val_bytes = device.bytes_per_element(precision)
+        act_bytes = _PRECISION_ACT_BYTES[precision]
+    ell_entry_bytes = idx_bytes + val_bytes
+    scale_bytes = n_rb * 4.0 if precision == "int8" else 0.0
 
     if impl == "reference":
         visited = n_rb * n_kb   # no grid actually runs; reuse for overhead=0
         flops = 2.0 * stats.nnz * f
-        dense_bytes = float(stats.nnz) * f * dtype_bytes   # gather, no reuse
-        sparse_bytes = float(stats.nnz) * ell_entry_bytes
+        dense_bytes = float(stats.nnz) * f * act_bytes   # gather, no reuse
+        sparse_bytes = float(stats.nnz) * ell_entry_bytes + scale_bytes
         grid_steps = 0
     else:
         if impl == "pallas":
@@ -334,13 +367,14 @@ def spmm_cost(
             raise ValueError(f"unknown impl for cost model: {impl}")
         # each visited pair processes block_rows x tau slots per f-tile
         flops = 2.0 * visited * block_rows * stats.tau * f_pad
-        dense_bytes = float(visited) * block_k * f_pad * dtype_bytes
+        dense_bytes = float(visited) * block_k * f_pad * act_bytes
         sparse_bytes = (
             float(visited) * n_fb * block_rows * stats.tau * ell_entry_bytes
+            + scale_bytes
         )
         grid_steps = visited * n_fb
 
-    out_bytes = float(r_pad + stats.n_out_rows) * f * dtype_bytes
+    out_bytes = float(r_pad + stats.n_out_rows) * f * act_bytes
     dram_bytes = dense_bytes + sparse_bytes + out_bytes
     if out_layout == "row_sharded":
         coll_bytes = reduce_scatter_bytes(
@@ -349,7 +383,7 @@ def spmm_cost(
         coll_bytes = psum_bytes(stats.n_out_rows, f, n_shards, dtype_bytes)
     if dense_layout == "row_sharded":
         coll_bytes += all_gather_bytes(
-            stats.n_dense_rows, f, n_shards, dtype_bytes)
+            stats.n_dense_rows, f, n_shards, act_bytes)
 
     shards = max(n_shards, 1)
     imb = max(float(shard_imbalance), 1.0)
@@ -385,6 +419,7 @@ def bucket_forward_seconds(
     block_rows: int = 128,
     block_k: int = 128,
     block_f: int = 128,
+    precision: str = "f32",
     device: "DeviceModel" = None,
 ) -> float:
     """Roofline seconds of one forward over a *planned* serving-bucket
@@ -411,7 +446,7 @@ def bucket_forward_seconds(
     return sum(
         spmm_cost(
             stats, f, impl=impl, block_rows=block_rows, block_k=block_k,
-            block_f=block_f, device=device,
+            block_f=block_f, precision=precision, device=device,
         ).seconds
         for f in f_dims
     )

@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core.sparse_formats import PAD_COL
 from repro.core.spmm import spmm_ell_arrays
-from repro.exec import plan_for_config
+from repro.exec import plan_for_config, quant
 from repro.models.gcn import GCNConfig, GCNGraph
 from repro.serve.sampler import SampledSubgraph
 
@@ -129,11 +129,13 @@ class PaddedRequest:
 
     bucket: Bucket
     cols: np.ndarray      # (rows, tau) int32, PAD_COL padding
-    vals: np.ndarray      # (rows, tau) float32
+    vals: np.ndarray      # (rows, tau); f32, bf16 or int8 per precision
     row_map: np.ndarray   # (rows,) int32, -1 padding
     feats: np.ndarray     # (nodes, F) float32, permuted node order
     seed_pos: np.ndarray  # (max_seeds,) int32 output rows to read, -1 padding
     n_seeds: int
+    # (rows / block_rows,) f32 per-row-block scales when vals are int8
+    scales: Optional[np.ndarray] = None
 
 
 class MicroBatcher:
@@ -149,12 +151,19 @@ class MicroBatcher:
         interpret: Optional[bool] = None,
         mesh=None,
         autoplan: bool = False,
+        precision: str = "f32",
     ):
         self.cfg = cfg
         self.ladder = ladder
         self.max_batch = max_batch
         self.max_seeds = max_seeds
         self.interpret = interpret
+        # Default storage precision for every rung; per-rung overrides
+        # (the engine's accuracy-budgeted warmup choice) land in
+        # _bucket_precisions via set_bucket_precision *before* warmup
+        # compiles, so precision never causes a post-warmup recompile.
+        self.precision = quant.validate_precision(precision)
+        self._bucket_precisions: Dict[Bucket, str] = {}
         # The coalesced forward traces the SpMM on bare arrays, so the plan
         # resolves here, once: a pallas_sparse config records its degradation
         # to the masked dense grid (visible to callers/benchmarks as
@@ -172,6 +181,14 @@ class MicroBatcher:
         self._executables: Dict[Tuple[Bucket, int], object] = {}
         self._bucket_plans: Dict[Tuple[Bucket, int], object] = {}
         self._layer_plans: Dict[Tuple[Bucket, int], list] = {}
+
+    def set_bucket_precision(self, bucket: Bucket, precision: str) -> None:
+        """Pin one rung's storage precision (call before warmup: the
+        precision is baked into the rung's trace and executable key)."""
+        self._bucket_precisions[bucket] = quant.validate_precision(precision)
+
+    def precision_for_bucket(self, bucket: Bucket) -> str:
+        return self._bucket_precisions.get(bucket, self.precision)
 
     def plan_for_bucket(self, bucket: Bucket, feature_dim: int):
         """The plan one ladder rung traces with.
@@ -296,6 +313,16 @@ class MicroBatcher:
         feats[: sub.n_sub_nodes] = features[sub.graph.pre.perm]
         seed_pos = np.full((self.max_seeds,), -1, dtype=np.int32)
         seed_pos[: sub.seed_local.size] = sub.graph.inv[sub.seed_local]
+        # Quantize host-side to the rung's storage precision: the padded
+        # tail rows are zero, so extra all-zero scale blocks get scale 1.0
+        # and dequantize to the same zeros.
+        prec = self.precision_for_bucket(bucket)
+        scales = None
+        if prec == "int8":
+            vals, scales = quant.quantize_values(vals, self.cfg.block_rows)
+            scales = np.asarray(scales, dtype=np.float32)
+        elif prec == "bf16":
+            vals = vals.astype(jnp.bfloat16)
         return PaddedRequest(
             bucket=bucket,
             cols=cols,
@@ -304,6 +331,7 @@ class MicroBatcher:
             feats=feats,
             seed_pos=seed_pos,
             n_seeds=int(sub.seed_local.size),
+            scales=scales,
         )
 
     # ------------------------------------------------------------------
@@ -312,11 +340,16 @@ class MicroBatcher:
 
     def _make_forward(self, bucket: Bucket, feature_dim: int):
         cfg = self.cfg
+        prec = self.precision_for_bucket(bucket)
         layer_plans = self.layer_plans_for_bucket(bucket, feature_dim)
+        if prec != "f32":
+            layer_plans = [
+                dataclasses.replace(p, precision=prec) for p in layer_plans
+            ]
         nodes_b = bucket.nodes
         mesh = self.mesh
 
-        def fwd(params, cols, vals, row_map, feats, seed_pos):
+        def fwd_impl(params, cols, vals, scales, row_map, feats, seed_pos):
             b, rows_b, tau = cols.shape
             f_in = feats.shape[-1]
             if mesh is not None:
@@ -333,6 +366,8 @@ class MicroBatcher:
                     jax.lax.with_sharding_constraint(a, sh)
                     for a in (cols, vals, row_map, feats, seed_pos)
                 )
+                if scales is not None:
+                    scales = jax.lax.with_sharding_constraint(scales, sh)
             # Block-diagonal coalescing: slot i's columns/output rows live in
             # [i * nodes_b, (i+1) * nodes_b), so one kernel call serves all.
             offs = jnp.arange(b, dtype=jnp.int32) * nodes_b
@@ -343,10 +378,19 @@ class MicroBatcher:
             rmap_f = jnp.where(row_map < 0, -1, row_map + offs[:, None]).reshape(
                 b * rows_b
             )
+            # Per-request scale blocks concatenate in row order: each slot's
+            # rows are a multiple of block_rows, so the flattened scales
+            # stay aligned to the coalesced operand's row blocks.
+            scales_f = None if scales is None else scales.reshape(-1)
+            qparams = (
+                params if prec == "f32"
+                else quant.quantize_params(params, prec, cfg.block_rows)
+            )
             x = feats.reshape(b * nodes_b, f_in)
             for i in range(cfg.n_layers):
-                p = params[f"layer_{i}"]
-                xw = x @ p["w"] + p["b"]
+                p = qparams[f"layer_{i}"]
+                # combination (dense); quant.affine is the matmul at f32
+                xw = quant.affine(x, p, prec, cfg.block_rows)
                 x = spmm_ell_arrays(
                     cols_f,
                     vals_f,
@@ -354,6 +398,9 @@ class MicroBatcher:
                     xw,
                     n_out_rows=b * nodes_b,
                     plan=layer_plans[i],
+                    scales=scales_f,
+                    scale_block_rows=(
+                        None if scales_f is None else cfg.block_rows),
                 )
                 if i < cfg.n_layers - 1:
                     x = jax.nn.relu(x)
@@ -361,18 +408,34 @@ class MicroBatcher:
             safe = jnp.maximum(seed_pos, 0)
             return jnp.take_along_axis(out, safe[:, :, None], axis=1)
 
+        if prec == "int8":
+            return fwd_impl
+
+        def fwd(params, cols, vals, row_map, feats, seed_pos):
+            return fwd_impl(params, cols, vals, None, row_map, feats,
+                            seed_pos)
+
         return fwd
 
     def _avals(self, params, bucket: Bucket, batch: int, feature_dim: int):
         tau = self.cfg.tau
+        prec = self.precision_for_bucket(bucket)
         p_avals = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype),
             params,
         )
+        val_aval = jax.ShapeDtypeStruct(
+            (batch, bucket.rows, tau), quant.storage_dtype(prec))
+        scale_avals = ()
+        if prec == "int8":
+            n_qb = -(-bucket.rows // self.cfg.block_rows)
+            scale_avals = (
+                jax.ShapeDtypeStruct((batch, n_qb), jnp.float32),)
         return (
             p_avals,
             jax.ShapeDtypeStruct((batch, bucket.rows, tau), jnp.int32),
-            jax.ShapeDtypeStruct((batch, bucket.rows, tau), jnp.float32),
+            val_aval,
+            *scale_avals,
             jax.ShapeDtypeStruct((batch, bucket.rows), jnp.int32),
             jax.ShapeDtypeStruct((batch, bucket.nodes, feature_dim), jnp.float32),
             jax.ShapeDtypeStruct((batch, self.max_seeds), jnp.int32),
@@ -385,7 +448,8 @@ class MicroBatcher:
             (tuple(jnp.shape(leaf)), str(jnp.result_type(leaf)))
             for leaf in jax.tree.leaves(params)
         )
-        key = (bucket, batch, feature_dim, p_sig)
+        key = (bucket, batch, feature_dim,
+               self.precision_for_bucket(bucket), p_sig)
         exe = self._executables.get(key)
         if exe is None:
             fwd = jax.jit(self._make_forward(bucket, feature_dim))
@@ -444,10 +508,16 @@ class MicroBatcher:
 
         feature_dim = reqs[0].feats.shape[1]
         exe = self.executable(params, bucket, batch, feature_dim)
+        # int8 rungs carry a scales operand (padding slots get scale 1.0:
+        # their vals are all-zero int8, so any scale dequantizes to zero).
+        scale_args = ()
+        if self.precision_for_bucket(bucket) == "int8":
+            scale_args = (stack("scales", 1.0),)
         out = exe(
             params,
             stack("cols", PAD_COL),
             stack("vals", 0),
+            *scale_args,
             stack("row_map", -1),
             stack("feats", 0),
             stack("seed_pos", -1),

@@ -89,7 +89,11 @@ class ServeEngine:
         mesh=None,
         autoplan: bool = False,
         ladder_growth=None,
+        precision: str = "f32",
+        accuracy_budget: float = 0.05,
     ):
+        from repro.exec import quant
+
         self.cfg = cfg
         self.adj_norm = adj_norm
         self.features = np.asarray(features, dtype=np.float32)
@@ -97,13 +101,25 @@ class ServeEngine:
         self.params = (
             params if params is not None else init_params(cfg, jax.random.PRNGKey(0))
         )
+        # ``precision`` is a fixed storage precision (exec.quant semantics)
+        # or "auto": measure each precision's full-graph logit error at
+        # warmup and let the cost model pick per rung under
+        # ``accuracy_budget``.  Until warmup resolves it, auto serves f32.
+        if precision != "auto":
+            quant.validate_precision(precision)
+        self.precision = precision
+        self.accuracy_budget = float(accuracy_budget)
+        self.precision_errors: Dict[str, float] = {"f32": 0.0}
+        self._static_precision = "f32" if precision == "auto" else precision
         # Full-graph artifact: preprocessed once per content key, persisted.
         # With autoplanning on, the full-graph step routes through the
         # multi-layer pipeline planner (per-layer impl/blocks + activation
         # layouts chosen jointly); the static config plan otherwise.
         self.graph = self.registry.get_or_build(adj_norm, cfg, persist=True)
+        self._plan_arg = "auto" if autoplan else None
         self._full_step = self.registry.forward_step(
-            adj_norm, cfg, plan="auto" if autoplan else None
+            adj_norm, cfg, plan=self._plan_arg,
+            precision=self._static_precision,
         )
         self.sampler = SubgraphSampler(
             adj_norm,
@@ -130,6 +146,7 @@ class ServeEngine:
             interpret=interpret,
             mesh=mesh,
             autoplan=autoplan,
+            precision=self._static_precision,
         )
         self.timings: Dict[str, List[float]] = {}
         self.seeds_served: Dict[str, int] = {}
@@ -185,7 +202,17 @@ class ServeEngine:
         escalation on hub-dense subgraphs cannot leave the compiled set —
         the full-graph rung of a big graph is skipped as unreachable.
         Uncapped fanout warms every rung.
+
+        With ``precision="auto"`` this is also where precision resolves:
+        each candidate's full-graph logit error is measured against the
+        f32 reference (``precision_errors``), then every ladder rung gets
+        the cheapest precision whose measured error fits
+        ``accuracy_budget`` — pinned on the batcher *before* its
+        executables compile, so serving at the chosen precisions never
+        recompiles.
         """
+        if self.precision == "auto":
+            self._resolve_auto_precision()
         if max_nodes is None and self.sampler.fanout is not None:
             f, h = self.sampler.fanout, self.sampler.hops
             bound_nodes = min(
@@ -212,6 +239,63 @@ class ServeEngine:
     def compile_count(self) -> int:
         """Bucketed-path executables built so far (the recompile monitor)."""
         return self.batcher.compiles
+
+    @property
+    def resolved_precision(self) -> str:
+        """Precision the full-graph step actually runs at — the
+        configured one, or the auto-resolved pick after ``warmup()``."""
+        return self._static_precision
+
+    def _resolve_auto_precision(self) -> None:
+        """Measure per-precision logit error and pin a precision per rung.
+
+        The measurement is the real thing, not a proxy: one full-graph
+        forward per candidate precision through the registry's jitted
+        steps, scored with :func:`repro.exec.quant.logit_error` against
+        the f32 reference.  Rung selection then reuses the bucket-cost
+        arithmetic (``plan.cost.bucket_forward_seconds``) with the
+        precision whose error exceeds the budget excluded — f32 is always
+        admissible, so resolution cannot fail.  Idempotent: errors are
+        measured once and re-running only re-pins the same choices.
+        """
+        from repro.exec import quant
+        from repro.plan import cost
+
+        if len(self.precision_errors) <= 1:
+            ref = np.asarray(self._full_step(self.params, self.features))
+            for p in ("bf16", "int8"):
+                step = self.registry.forward_step(
+                    self.adj_norm, self.cfg, plan=self._plan_arg, precision=p)
+                out = np.asarray(step(self.params, self.features))
+                self.precision_errors[p] = quant.logit_error(ref, out)
+        admissible = tuple(
+            p for p in quant.PRECISIONS
+            if self.precision_errors.get(p, float("inf"))
+            <= self.accuracy_budget or p == "f32"
+        )
+        cfg = self.cfg
+        f_dims = [cfg.hidden_dim] * (cfg.n_layers - 1) + [cfg.out_dim]
+        mean_nnz = self.batcher.ladder.mean_row_nnz or cfg.tau / 2
+        for b in self.batcher.ladder.entries:
+            best_p, best_s = "f32", None
+            for p in admissible:
+                s = cost.bucket_forward_seconds(
+                    rows=b.rows, n_out_rows=b.nodes, mean_row_nnz=mean_nnz,
+                    tau=cfg.tau, f_dims=f_dims, impl=cfg.spmm_impl,
+                    block_rows=cfg.block_rows, block_k=cfg.block_k,
+                    block_f=cfg.block_f, precision=p,
+                )
+                if best_s is None or s < best_s:
+                    best_p, best_s = p, s
+            self.batcher.set_bucket_precision(b, best_p)
+        # Full-graph serving swaps to the cheapest admissible precision
+        # too; its step was already compiled during measurement, so the
+        # swap costs nothing.
+        full = admissible[-1] if len(admissible) > 1 else "f32"
+        if full != self._static_precision:
+            self._full_step = self.registry.forward_step(
+                self.adj_norm, self.cfg, plan=self._plan_arg, precision=full)
+            self._static_precision = full
 
     # ------------------------------------------------------------------
     # Scenarios

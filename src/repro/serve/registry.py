@@ -101,21 +101,21 @@ class ArtifactRegistry:
 
     def forward_step(
         self, adj: CSRMatrix, cfg: GCNConfig, persist: bool = True,
-        plan=None,
+        plan=None, precision: str = "f32",
     ) -> Callable:
         """Jitted full-graph forward ``step(params, features) -> logits``
         bound to the registered preprocessed operand.
 
-        Keyed on ``(graph_key, cfg)``: graph_key deliberately ignores
-        forward-only fields (dims, spmm impl/blocks) so the *operand* is
-        shared, but the jitted step must not be.  ``plan`` is forwarded to
-        :func:`gcn_forward` — ``"auto"`` plans the whole stack through
-        ``repro.exec.pipeline`` once at build time (host-side, so the
-        traced step carries the already-chosen per-layer plans); a plan
-        object keys the cache by identity.
+        Keyed on ``(graph_key, cfg, precision)``: graph_key deliberately
+        ignores forward-only fields (dims, spmm impl/blocks) so the
+        *operand* is shared, but the jitted step must not be.  ``plan`` is
+        forwarded to :func:`gcn_forward` — ``"auto"`` plans the whole
+        stack through ``repro.exec.pipeline`` once at build time
+        (host-side, so the traced step carries the already-chosen
+        per-layer plans); a plan object keys the cache by identity.
         """
         gkey = graph_key(adj, cfg)
-        key = (gkey, cfg,
+        key = (gkey, cfg, precision,
                plan if (plan is None or isinstance(plan, str)) else id(plan))
         fwd = self._forwards.get(key)
         if fwd is not None:
@@ -127,13 +127,50 @@ class ArtifactRegistry:
             # host-side arithmetic over the preprocessed operand.
             from repro.exec.pipeline import plan_pipeline
 
-            step_plan = plan_pipeline(cfg, graph.pre.ell)
+            step_plan = plan_pipeline(cfg, graph.pre.ell,
+                                      precision=precision)
         fwd = jax.jit(
             lambda params, feats: gcn_forward(
-                params, graph, feats, cfg, plan=step_plan)
+                params, graph, feats, cfg, plan=step_plan,
+                precision=precision)
         )
         self._forwards[key] = fwd
         return fwd
+
+    def quantized_ell(
+        self, adj: CSRMatrix, cfg: GCNConfig, precision: str,
+        persist: bool = True,
+    ):
+        """The graph's :class:`~repro.exec.quant.QuantizedELL` artifact,
+        content-keyed by graph + precision + scale granularity.
+
+        Quantization is cheap next to preprocessing but the artifact is
+        what a serving replica actually ships to devices, so it rides the
+        same memory LRU + disk pickle machinery as the graphs (the stats
+        counters cover it too).  ``precision`` must be non-f32 — the f32
+        artifact *is* the preprocessed TiledELL.
+        """
+        from repro.exec import quant
+
+        gkey = graph_key(adj, cfg)
+        qkey = f"{gkey}_q_{precision}_{cfg.block_rows}"
+        art = self._graphs.get(qkey)
+        if art is not None:
+            self.stats.mem_hits += 1
+            return art
+        if persist:
+            art, hit = disk_cache.load_pickle(qkey, self.cache_dir)
+            if hit:
+                self.stats.disk_hits += 1
+                self._graphs.put(qkey, art)
+                return art
+        graph = self.get_or_build(adj, cfg, persist=persist, key=gkey)
+        art = quant.quantize_ell(graph.pre.ell, precision, cfg.block_rows)
+        self.stats.builds += 1
+        if persist:
+            disk_cache.store_pickle(qkey, art, self.cache_dir)
+        self._graphs.put(qkey, art)
+        return art
 
     def _remember(self, key: str, graph: GCNGraph) -> None:
         self._graphs.put(key, graph)

@@ -1,0 +1,428 @@
+"""Tests for the quantized serving path (repro.exec.quant and friends).
+
+Covers the full vertical: value round-trips, kernel parity at every
+precision (single- and multi-device), the precision-aware cost model,
+autoplan's accuracy-budget gate, the serving engine's auto-precision
+resolution (zero recompiles), the registry's quantized artifacts, and
+the fleet manager's arrival-rate-predictive unload.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import preprocess
+from repro.core.sparse_formats import random_power_law_csr
+from repro.core.spmm import spmm_ell, spmm_ell_arrays
+from repro.exec import quant
+from repro.models.gcn import GCNConfig, GCNGraph, gcn_forward, init_params
+from repro.plan import cost
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE", str(tmp_path / "cache"))
+
+
+# ---------------------------------------------------------------------------
+# value round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_roundtrip_bounds():
+    """Module-docstring claims: the block max round-trips bit-for-bit,
+    everything else to within half a quantization step."""
+    rng = np.random.default_rng(0)
+    vals = rng.standard_normal((96, 5)).astype(np.float32)
+    q, scales = quant.quantize_values(vals, block_rows=32)
+    assert q.dtype == np.int8 and scales.shape == (3,)
+    back = quant.dequantize_values(q, scales, block_rows=32)
+    for blk in range(3):
+        v, b, s = (vals[32 * blk:32 * (blk + 1)],
+                   back[32 * blk:32 * (blk + 1)], float(scales[blk]))
+        # the max-abs element maps to +-127 exactly
+        i = np.unravel_index(np.abs(v).argmax(), v.shape)
+        assert b[i] == v[i]
+        assert np.abs(b - v).max() <= s / 2 + 1e-7
+
+
+def test_quantize_saturates_at_127():
+    vals = np.asarray([[1.0], [1000.0]], dtype=np.float32)
+    q, scales = quant.quantize_values(vals, block_rows=2)
+    assert int(q.max()) == 127 and int(abs(q).max()) == 127
+
+
+def test_zero_block_gets_unit_scale():
+    vals = np.zeros((64, 4), dtype=np.float32)
+    vals[:32] = 2.0
+    q, scales = quant.quantize_values(vals, block_rows=32)
+    assert scales[1] == 1.0
+    back = quant.dequantize_values(q, scales, block_rows=32)
+    np.testing.assert_array_equal(back, vals)
+
+
+def test_align_scales_rebocks_or_refuses():
+    scales = np.asarray([1.0, 2.0], dtype=np.float32)
+    np.testing.assert_array_equal(
+        quant.align_scales(scales, 64, 32), [1.0, 1.0, 2.0, 2.0])
+    assert quant.align_scales(scales, 64, 64) is scales
+    assert quant.align_scales(scales, 64, 48) is None
+
+
+# ---------------------------------------------------------------------------
+# byte accounting + cost model
+# ---------------------------------------------------------------------------
+
+
+def test_bytes_per_element_accepts_precisions_and_dtypes():
+    d = cost.TPU_V5E
+    assert d.bytes_per_element("f32") == 4
+    assert d.bytes_per_element("bf16") == 2
+    assert d.bytes_per_element("int8") == 1
+    assert d.bytes_per_element(np.float32) == 4
+    assert d.bytes_per_element(jnp.bfloat16) == 2
+
+
+@pytest.mark.parametrize("impl", ["reference", "pallas"])
+def test_cost_model_dram_monotone_in_precision(impl):
+    adj = random_power_law_csr(256, 256, 2_000, alpha=2.0, seed=0)
+    res = preprocess(adj, tau=4, tile_rows=16, pad_rows_to=128)
+    stats = cost.graph_stats_from_ell(res.ell)
+    byts = {
+        p: cost.spmm_cost(stats, 32, impl=impl, block_rows=128, block_k=128,
+                          block_f=32, precision=p).dram_bytes
+        for p in quant.PRECISIONS
+    }
+    assert byts["f32"] > byts["bf16"] > byts["int8"], byts
+    # the bulk of the traffic is the value+activation planes: halving
+    # them must show up as a material reduction, not an epsilon
+    assert byts["bf16"] < 0.6 * byts["f32"]
+
+
+# ---------------------------------------------------------------------------
+# kernel parity across impls and precisions
+# ---------------------------------------------------------------------------
+
+
+def _problem(n=96, nnz=700, tau=5, f=24, seed=0):
+    adj = random_power_law_csr(n, n, nnz, seed=seed)
+    res = preprocess(adj, tau=tau, tile_rows=16, edge_cut="rcm")
+    dense = jnp.asarray(
+        np.random.default_rng(seed + 1).standard_normal((n, f)), jnp.float32)
+    return res, dense
+
+
+@pytest.mark.parametrize("impl", ["reference", "pallas", "pallas_sparse"])
+def test_int8_spmm_parity_across_impls(impl):
+    """Every impl computes the same int8 product as the dequantized
+    reference oracle (f32 accumulate, bf16 activations)."""
+    res, dense = _problem()
+    ell = res.ell
+    q, scales = quant.quantize_values(np.asarray(ell.vals), block_rows=16)
+    deq = quant.dequantize_values(q, scales, block_rows=16)
+    oracle = np.asarray(spmm_ell_arrays(
+        jnp.asarray(ell.cols), jnp.asarray(deq, jnp.float32),
+        jnp.asarray(ell.row_map), dense.astype(jnp.bfloat16),
+        ell.n_orig_rows, impl="reference", block_rows=16, block_k=16,
+        block_f=16))
+    out = np.asarray(spmm_ell_arrays(
+        jnp.asarray(ell.cols), jnp.asarray(q),
+        jnp.asarray(ell.row_map), dense, ell.n_orig_rows, impl=impl,
+        block_rows=16, block_k=16, block_f=16,
+        scales=jnp.asarray(scales), scale_block_rows=16))
+    np.testing.assert_allclose(out, oracle, rtol=2e-2, atol=2e-2)
+
+
+def test_f32_forward_bitwise_equal_to_unplumbed_baseline():
+    """precision="f32" must not perturb a single bit of the baseline."""
+    res, dense = _problem()
+    base = np.asarray(spmm_ell(res.ell, dense, impl="reference"))
+    cfg = GCNConfig(in_dim=24, hidden_dim=16, out_dim=4, tau=5)
+    adj = random_power_law_csr(96, 96, 700, seed=0)
+    graph = GCNGraph.build(adj, cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    feats = jnp.asarray(
+        np.random.default_rng(3).standard_normal((96, 24)), jnp.float32)
+    ref = np.asarray(gcn_forward(params, graph, feats, cfg))
+    out = np.asarray(gcn_forward(params, graph, feats, cfg, precision="f32"))
+    np.testing.assert_array_equal(out, ref)
+    again = np.asarray(spmm_ell(res.ell, dense, impl="reference"))
+    np.testing.assert_array_equal(again, base)
+
+
+_SUBPROCESS_QUANT_PARITY = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import preprocess, random_power_law_csr
+from repro.exec import SpmmPlan, execute, quant
+
+assert jax.device_count() == 4, jax.device_count()
+adj = random_power_law_csr(96, 96, 700, seed=0)
+res = preprocess(adj, tau=5, tile_rows=16, edge_cut="rcm")
+dense = jnp.asarray(
+    np.random.default_rng(1).standard_normal((96, 24)), jnp.float32)
+art = quant.quantize_ell(res.ell, "int8", block_rows=16)
+deq = quant.dequantize_values(art.vals, art.scales, 16)
+ref_plan = SpmmPlan(impl="reference", block_rows=16, block_k=16, block_f=16)
+ref = np.asarray(execute(
+    ref_plan, art.operands(res.ell), dense))
+for impl in ("reference", "pallas"):
+    for n_dev in (1, 2, 4):
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:n_dev]), ("data",))
+        plan = SpmmPlan(impl=impl, block_rows=16, block_k=16, block_f=16,
+                        mesh=mesh)
+        out = np.asarray(execute(plan, art.operands(res.ell), dense))
+        err = np.abs(out - ref).max() / max(np.abs(ref).max(), 1e-9)
+        assert err < 2e-2, (impl, n_dev, err)
+        print(f"ok {impl} x{n_dev} err={err:.2e}")
+"""
+
+
+def test_int8_sharded_parity_multidevice_subprocess():
+    """int8 parity holds when the sub-row grid is sharded over 2/4
+    devices (shard boundaries re-block the per-row-block scales)."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_QUANT_PARITY],
+                       env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert r.stdout.count("ok ") == 6
+
+
+# ---------------------------------------------------------------------------
+# end-to-end logit error on two synthetic graph shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,nnz,alpha,fdim", [
+    (256, 2_000, 2.0, 32),     # cora-shaped: small, moderately skewed
+    (512, 8_000, 2.5, 64),     # pubmed-shaped: larger, heavier tail
+])
+def test_end_to_end_logit_error_under_budget(n, nnz, alpha, fdim):
+    adj = random_power_law_csr(n, n, nnz, alpha=alpha, seed=0)
+    cfg = GCNConfig(in_dim=fdim, hidden_dim=fdim, out_dim=8, tau=4)
+    graph = GCNGraph.build(adj, cfg)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    feats = jnp.asarray(
+        np.random.default_rng(2).standard_normal((n, fdim)), jnp.float32)
+    ref = np.asarray(gcn_forward(params, graph, feats, cfg))
+    for precision, budget in (("bf16", 0.02), ("int8", 0.05)):
+        out = np.asarray(gcn_forward(params, graph, feats, cfg,
+                                     precision=precision))
+        err = quant.logit_error(ref, out)
+        assert 0.0 < err <= budget, (precision, err)
+
+
+# ---------------------------------------------------------------------------
+# autoplan respects the accuracy budget
+# ---------------------------------------------------------------------------
+
+
+def test_autoplan_precision_respects_budget():
+    from repro.plan.autoplan import choose_plan
+
+    adj = random_power_law_csr(256, 256, 2_000, alpha=2.0, seed=0)
+    res = preprocess(adj, tau=4, tile_rows=16, pad_rows_to=128)
+    cfg = GCNConfig(in_dim=32, hidden_dim=32, out_dim=32, tau=4)
+    kw = dict(impls=("reference",), n_devices=1,
+              precisions=quant.PRECISIONS)
+    # int8 within budget -> cheapest admissible precision wins
+    c = choose_plan(res.ell, 32, cfg,
+                    precision_errors={"bf16": 0.01, "int8": 0.03},
+                    accuracy_budget=0.05, **kw)
+    assert c.plan.precision == "int8"
+    # int8 over budget -> falls back to bf16
+    c = choose_plan(res.ell, 32, cfg,
+                    precision_errors={"bf16": 0.01, "int8": 0.2},
+                    accuracy_budget=0.05, **kw)
+    assert c.plan.precision == "bf16"
+    # budget set but nothing measured -> never certify unmeasured: f32
+    c = choose_plan(res.ell, 32, cfg, accuracy_budget=0.05, **kw)
+    assert c.plan.precision == "f32"
+
+
+# ---------------------------------------------------------------------------
+# serving: auto precision resolution, zero recompiles, registry artifacts
+# ---------------------------------------------------------------------------
+
+
+def _engine(precision, fanout=8, **kw):
+    from repro.serve import ServeEngine
+
+    adj = random_power_law_csr(256, 256, 2_000, alpha=2.0, seed=5)
+    # gcn-normalized-ish symmetric-free synthetic: raw CSR works fine here
+    feats = np.random.default_rng(5).standard_normal((256, 16)).astype(
+        np.float32)
+    cfg = GCNConfig(in_dim=16, hidden_dim=8, out_dim=4, tau=4)
+    return ServeEngine(adj, feats, cfg, precision=precision, fanout=fanout,
+                       max_seeds=4, base_bucket_nodes=64, **kw)
+
+
+def test_engine_auto_precision_zero_recompiles():
+    engine = _engine("auto", accuracy_budget=0.05)
+    built = engine.warmup()
+    # errors were actually measured and a per-rung precision pinned
+    assert set(engine.precision_errors) == {"f32", "bf16", "int8"}
+    assert engine.precision_errors["f32"] == 0.0
+    picks = {b: engine.batcher.precision_for_bucket(b)
+             for b in engine.batcher.ladder.entries}
+    assert all(p in quant.PRECISIONS for p in picks.values())
+    assert engine.resolved_precision in quant.PRECISIONS
+
+    rng = np.random.default_rng(6)
+    for _ in range(8):
+        engine.query(rng.choice(256, size=int(rng.integers(1, 5)),
+                                replace=False))
+    engine.full_forward()
+    assert engine.compile_count == built, (
+        f"{engine.compile_count - built} post-warmup compilations")
+
+
+def test_engine_int8_matches_f32_within_budget():
+    e32 = _engine("f32", fanout=None)
+    e8 = _engine("int8", fanout=None)
+    ref = e32.full_forward()
+    out = e8.full_forward()
+    assert quant.logit_error(ref, out) < 0.05
+    # the query path re-quantizes the sampled subgraph with its own block
+    # boundaries (and normalizes over just the queried rows), so it gets
+    # a looser bound than the full-graph budget — the point is that the
+    # answer is recognizably the f32 one, not garbage
+    seeds = [3, 77, 200]
+    assert quant.logit_error(ref[seeds], e8.query(seeds)) < 0.1
+
+
+def test_registry_quantized_ell_cached_and_keyed_by_precision(tmp_path):
+    from repro.serve import ArtifactRegistry
+
+    adj = random_power_law_csr(128, 128, 900, seed=1)
+    cfg = GCNConfig(in_dim=8, hidden_dim=8, out_dim=4, tau=4)
+    reg = ArtifactRegistry(cache_dir=str(tmp_path))
+    a1 = reg.quantized_ell(adj, cfg, "int8")
+    builds = reg.stats.builds
+    a2 = reg.quantized_ell(adj, cfg, "int8")
+    assert a2 is a1 and reg.stats.builds == builds     # mem hit
+    a3 = reg.quantized_ell(adj, cfg, "bf16")
+    assert a3.precision == "bf16" and a3 is not a1     # separate key
+    # a fresh registry over the same dir restores from disk, not rebuild
+    reg2 = ArtifactRegistry(cache_dir=str(tmp_path))
+    b1 = reg2.quantized_ell(adj, cfg, "int8")
+    assert reg2.stats.disk_hits >= 1
+    np.testing.assert_array_equal(b1.vals, a1.vals)
+    np.testing.assert_array_equal(b1.scales, a1.scales)
+
+
+# ---------------------------------------------------------------------------
+# fleet: predictive unload via arrival-rate EWMA
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    manual = True
+
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self):
+        return self.t
+
+    def sleep(self, s):
+        self.t += s
+
+
+def _stub_servable(key):
+    from repro.fleet.servable import Servable
+
+    class Stub(Servable):
+        def __init__(self):
+            self.unloaded_n = 0
+
+        @property
+        def key(self):
+            return key
+
+        def load(self):
+            pass
+
+        def unload(self):
+            self.unloaded_n += 1
+
+        def cost_units(self):
+            return 1.0
+
+        def prepare(self, payload):
+            raise NotImplementedError
+
+        def run_batch(self, reqs):
+            raise NotImplementedError
+
+        def profile(self):
+            raise NotImplementedError
+
+        @property
+        def estimator(self):
+            raise NotImplementedError
+
+    return Stub()
+
+
+def _traffic(manager, clock):
+    """a: hot but LRU-oldest; b: dying but MRU; then c forces an evict."""
+    for t in (0.0, 1.0, 2.0, 3.0):
+        clock.t = t
+        manager.resolve("a")
+    clock.t = 0.5
+    manager.resolve("b")
+    clock.t = 10.0
+    manager.resolve("b")
+    clock.t = 11.0
+    manager.resolve("c")
+
+
+def test_predictive_unload_evicts_lowest_arrival_rate():
+    from repro.fleet.manager import FleetManager
+
+    clk = _FakeClock()
+    m = FleetManager(capacity_units=2.0, predictive_unload=True, clock=clk)
+    svs = {k: m.register(_stub_servable(k)) for k in "abc"}
+    _traffic(m, clk)
+    # b is MRU but its arrival rate (~0.1/s) is far below a's (~1/s)
+    assert m.loaded("a") and m.loaded("c") and not m.loaded("b")
+    assert svs["b"].unloaded_n == 1 and svs["a"].unloaded_n == 0
+    assert m.unloads == 1 and m._loaded.evictions == 1
+    assert m.arrival_rate("a") > m.arrival_rate("b") > 0.0
+
+
+def test_default_unload_stays_pure_lru():
+    from repro.fleet.manager import FleetManager
+
+    clk = _FakeClock()
+    m = FleetManager(capacity_units=2.0, clock=clk)
+    svs = {k: m.register(_stub_servable(k)) for k in "abc"}
+    _traffic(m, clk)
+    # identical traffic, default policy: the LRU-oldest (a) goes
+    assert m.loaded("b") and m.loaded("c") and not m.loaded("a")
+    assert svs["a"].unloaded_n == 1 and svs["b"].unloaded_n == 0
+
+
+def test_predictive_unload_with_no_rates_degenerates_to_lru():
+    from repro.fleet.manager import FleetManager
+
+    clk = _FakeClock()
+    m = FleetManager(capacity_units=1.0, predictive_unload=True, clock=clk)
+    for k in "xy":
+        m.register(_stub_servable(k))
+    m.resolve("x")
+    clk.t = 1.0
+    m.resolve("y")
+    assert m.loaded("y") and not m.loaded("x")
