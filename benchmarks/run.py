@@ -4,8 +4,15 @@ Emits CSV blocks per figure (Fig 9 area, Fig 10 ablation, Fig 11
 flexible-k, Fig 12 buffer sweep, Fig 13 VLEN/depth, kernel microbench).
 Dataset scope via REPRO_DATASETS (default: all five; set
 REPRO_DATASETS=cora,citeseer,pubmed for a quick pass).
+
+Besides the per-bench CSV/json artifacts, every full run appends one
+record per bench to ``results/bench/BENCH_summary.json``
+(``REPRO_BENCH_DIR`` to relocate) — an append-only log of ``{run_at,
+bench, seconds, ok, summary}`` rows, so regressions across runs are
+greppable from one file without re-parsing each bench's own output.
 """
 
+import json
 import os
 import sys
 import time
@@ -18,6 +25,7 @@ from benchmarks import (  # noqa: E402
     bench_buffer_sizes,
     bench_fleet,
     bench_flexible_k,
+    bench_fused,
     bench_pipeline,
     bench_plan,
     bench_quant,
@@ -28,10 +36,47 @@ from benchmarks import (  # noqa: E402
     bench_vlen_depth,
 )
 
+BENCH_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+SUMMARY_PATH = os.path.join(BENCH_DIR, "BENCH_summary.json")
+
+
+def _jsonable(value):
+    """The bench's return value if it survives json round-tripping."""
+    try:
+        json.dumps(value)
+        return value
+    except (TypeError, ValueError):
+        return repr(value)[:500]
+
+
+def append_summary(records, path: str = SUMMARY_PATH) -> None:
+    """Append this run's records to the consolidated summary log.
+
+    The file is a flat JSON list, append-only across runs: existing
+    records are preserved verbatim (an unreadable/corrupt file is
+    sidestepped rather than clobbered — the old content moves to a
+    ``.corrupt`` sibling so no history is silently lost).
+    """
+    existing = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+            if not isinstance(existing, list):
+                raise ValueError("summary root is not a list")
+        except (ValueError, OSError):
+            os.replace(path, path + ".corrupt")
+            existing = []
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(existing + list(records), f, indent=2)
+
 
 def main() -> None:
     t0 = time.time()
+    run_at = time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime())
     print(f"# datasets: {os.environ.get('REPRO_DATASETS', 'all five')}")
+    records = []
     for name, mod in [
         ("Fig 9 (area)", bench_area),
         ("Fig 10 (ablation)", bench_ablation),
@@ -42,6 +87,7 @@ def main() -> None:
         ("SpMM sharded (1 vs N devices)", bench_spmm_sharded),
         ("Autoplan vs static plan", bench_plan),
         ("Pipelined multi-layer forward (sharded activations)", bench_pipeline),
+        ("Fused combination+aggregation layers", bench_fused),
         ("Quantized serving (f32/bf16/int8)", bench_quant),
         ("Serving engine", bench_serve),
         ("Async queue (open-loop Poisson)", bench_queue),
@@ -49,9 +95,24 @@ def main() -> None:
     ]:
         print(f"\n## {name}")
         t = time.time()
-        mod.run()
-        print(f"# ({time.time() - t:.1f}s)")
-    print(f"\n# total {time.time() - t0:.1f}s")
+        rec = {"run_at": run_at, "bench": mod.__name__.split(".")[-1],
+               "title": name}
+        try:
+            rec["summary"] = _jsonable(mod.run())
+            rec["ok"] = True
+        except BaseException as e:  # noqa: BLE001 - log, then re-raise
+            rec["ok"] = False
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["seconds"] = round(time.time() - t, 2)
+            records.append(rec)
+            append_summary(records)
+            raise
+        rec["seconds"] = round(time.time() - t, 2)
+        records.append(rec)
+        print(f"# ({rec['seconds']:.1f}s)")
+    append_summary(records)
+    print(f"\n# total {time.time() - t0:.1f}s "
+          f"(summary -> {SUMMARY_PATH})")
 
 
 if __name__ == "__main__":

@@ -136,3 +136,35 @@ def plan_kernel_grid(
         n_f_tiles=_ceil_div(feature_dim, block_f),
         density=float(len(pairs)) / float(max(n_rb * n_kb, 1)),
     )
+
+
+def plan_fused_k_schedule(
+    ell: TiledELL,
+    block_rows: int = 128,
+    block_k: int = 128,
+    hot_k_first: bool = True,
+) -> np.ndarray:
+    """k-tile visit order for the fused (whole-row-space) launch schedule.
+
+    The fused kernel keeps the *entire* output column slab VMEM-resident,
+    so its grid has no row-block axis — one step per k-tile occupied by
+    any row.  The tiles are emitted in the same global ``k_order`` that
+    :func:`plan_kernel_grid` applies within each row block (hot tiles
+    first), which makes each row block's accumulation sequence here an
+    exact supersequence of its unfused sparse-grid sequence: the extra
+    tiles contribute all-zero expanded blocks, so fused and unfused
+    accumulate every output element through bitwise-identical partials.
+    """
+    occ_any = ell.block_occupancy(block_rows, block_k).any(axis=0)
+    n_kb = occ_any.shape[0]
+    if hot_k_first:
+        valid = ell.cols != -1
+        kb_of = np.where(valid, ell.cols // block_k, 0)
+        counts = np.bincount(kb_of[valid].ravel(), minlength=n_kb)
+        k_order = np.argsort(-counts, kind="stable")
+    else:
+        k_order = np.arange(n_kb)
+    kbs = [int(kb) for kb in k_order if occ_any[kb]]
+    if not kbs:  # fully-empty matrix: one step keeps the init path alive
+        kbs = [0]
+    return np.asarray(kbs, dtype=np.int32)

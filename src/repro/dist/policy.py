@@ -86,3 +86,30 @@ def constrain(x: jax.Array, specs: Sequence[Spec]) -> jax.Array:
     if spec is None:
         return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_ranked(x: jax.Array, specs: Sequence[Spec]) -> jax.Array:
+    """Constrain ``x`` to the *cost-model-ranked* viable candidate.
+
+    :func:`constrain` applies the first viable spec, so the caller's hand
+    ordering IS the placement policy.  Here every viable candidate is
+    scored by :func:`repro.plan.cost.rank_specs` (estimated per-device
+    collective bytes to keep the array's replicas in sync) and the
+    cheapest wins — with ties still broken by candidate order, so a list
+    the cost model is indifferent about behaves exactly like
+    :func:`constrain`.  This is the chooser for placements that decide a
+    collective's shape, e.g. the MoE dispatch buffer whose sharding picks
+    the token->expert all-to-all decomposition.
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    viable = [s for s in specs if spec_viable(mesh, x.shape, s)]
+    if not viable:
+        return x
+    from repro.plan.cost import rank_specs  # deferred: dist stays base-layer
+
+    spec = viable[rank_specs(
+        mesh, x.shape, viable, dtype_bytes=x.dtype.itemsize)]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -188,6 +188,49 @@ def record_spmm_dram(
     )
 
 
+def execute_layer(
+    plan: SpmmPlan,
+    operands: SpmmOperands,
+    x: jax.Array,
+    layer: dict,
+    *,
+    w_block_rows: int = quant.QUANT_BLOCK_ROWS,
+) -> jax.Array:
+    """One full GCN layer — combination ``x @ w + b`` then aggregation —
+    under the plan's fusion decision.
+
+    This is the layer-level entry every forward path (``models.gcn``,
+    ``exec.pipeline``, the serving batcher) routes through.  A plan with
+    ``fused=True`` and a pallas impl runs the single-launch fused kernel
+    (``exec.fused``); otherwise the two launches run separately, exactly
+    as before, with the combination's DRAM traffic ledgered so fused vs
+    unfused byte totals compare honestly.  The reference impl always runs
+    unfused (a gather oracle has no launch to fuse), as do feature-sharded
+    plans (the fused launch keeps the full feature slab VMEM-resident).
+    ``layer`` holds ``"w"``/``"b"`` and optionally ``"w_scale"`` with
+    ``w_block_rows`` granularity (see ``quant.quantize_params``).
+    """
+    plan = plan.resolve(schedulable=operands.schedulable)
+    if (
+        plan.fused
+        and plan.effective_impl != "reference"
+        and not plan.feature_sharded
+    ):
+        from repro.exec.fused import execute_fused  # deferred: no cycle
+
+        return execute_fused(
+            plan, operands, x, layer, w_block_rows=w_block_rows
+        )
+    xw = quant.affine(x, layer, plan.precision, w_block_rows)
+    if operands.concrete and not isinstance(x, jax.core.Tracer):
+        from repro.exec.fused import record_combination_dram
+
+        record_combination_dram(
+            plan, x.shape[0], x.shape[1], int(xw.shape[1])
+        )
+    return execute(plan, operands, xw)
+
+
 def execute(plan: SpmmPlan, operands: SpmmOperands, dense: jax.Array) -> jax.Array:
     """Run one planned SpMM: ``A @ dense`` for the bounded-row sparse ``A``.
 

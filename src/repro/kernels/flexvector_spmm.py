@@ -296,6 +296,287 @@ def spmm_ell_sparse_grid(
     )
 
 
+def _combine_tile(x_ref, w_ref, b_ref, kb, block_k, k_real, cast_xw):
+    """In-VMEM dense combination for one k-tile: ``x_tile @ w + b``.
+
+    Replicates ``exec.quant.affine`` per tile (bf16 inputs arrive
+    pre-cast, accumulation is f32, bias added in f32), then zeroes the
+    rows past ``k_real`` so the tile is bitwise-identical to the padded
+    activation the unfused path would have read from HBM.  ``cast_xw``
+    rounds through the storage dtype (bf16 under bf16/int8 plans) the
+    way ``quant.cast_dense`` does between the two unfused launches.
+    """
+    xw = jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    xw = xw + b_ref[...].astype(jnp.float32)
+    rows = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, xw.shape, 0)
+    xw = jnp.where(rows < k_real, xw, 0.0)
+    if cast_xw is not None:
+        xw = xw.astype(cast_xw)
+    return xw
+
+
+def _fused_accumulate(cols, vals, scales, xw, out_ref, kb_base, *, block_rows, block_k):
+    """Aggregate one combined k-tile into the resident output slab.
+
+    Per row block the expansion + dot shapes are exactly those of the
+    unfused kernels — (BR, tau) -> (BR, BK) @ (BK, BF) — so each output
+    element accumulates through the same sequence of partial products.
+    """
+    acc = _acc_dtype(out_ref.dtype)
+    n_rb = cols.shape[0] // block_rows
+    parts = []
+    for rb in range(n_rb):  # static: r // block_rows
+        lo = rb * block_rows
+        a_blk = _expand_block(
+            cols[lo:lo + block_rows], vals[lo:lo + block_rows],
+            kb_base, block_k, acc,
+        )
+        if scales is not None:
+            a_blk = a_blk * scales[rb, 0].astype(acc)
+        parts.append(jax.lax.dot_general(
+            a_blk,
+            xw.astype(acc),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=out_ref.dtype,
+        ))
+    out_ref[...] += parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
+
+def _fused_dense_kernel(
+    cols_ref, vals_ref, x_ref, w_ref, b_ref, out_ref,
+    *, block_rows, block_k, k_real, cast_xw,
+):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xw = _combine_tile(x_ref, w_ref, b_ref, kb, block_k, k_real, cast_xw)
+    _fused_accumulate(
+        cols_ref[...], vals_ref[...], None, xw, out_ref, kb * block_k,
+        block_rows=block_rows, block_k=block_k,
+    )
+
+
+def _fused_dense_kernel_scaled(
+    cols_ref, vals_ref, scales_ref, x_ref, w_ref, b_ref, out_ref,
+    *, block_rows, block_k, k_real, cast_xw,
+):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xw = _combine_tile(x_ref, w_ref, b_ref, kb, block_k, k_real, cast_xw)
+    _fused_accumulate(
+        cols_ref[...], vals_ref[...], scales_ref[...], xw, out_ref,
+        kb * block_k, block_rows=block_rows, block_k=block_k,
+    )
+
+
+def spmm_ell_fused_dense_grid(
+    cols: jax.Array,   # (R, tau) int32, PAD_COL = -1 padding
+    vals: jax.Array,   # (R, tau)
+    x: jax.Array,      # (K, F_in) layer input, padded to k % block_k == 0
+    w: jax.Array,      # (F_in, F_out) layer weight, F_out % block_f == 0
+    b: jax.Array,      # (1, F_out) layer bias
+    *,
+    block_rows: int = 128,
+    block_k: int = 128,
+    block_f: int = 128,
+    k_real: Optional[int] = None,   # rows of x that are real (rest padding)
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+    scales: Optional[jax.Array] = None,  # (r // block_rows,) f32 dequant
+    cast_xw=None,                        # storage round-trip dtype (bf16)
+) -> jax.Array:
+    """One launch per layer: combination ``x @ w + b`` fused with the
+    masked full-grid aggregation schedule.
+
+    The grid is (f-tile, k-tile); the whole (R, block_f) output slab is
+    the out block for every step of one f-tile, so it stays VMEM-resident
+    across the k sweep and the intermediate activation never exists in
+    HBM.  Per k-tile the kernel computes the (block_k, block_f) slice of
+    ``x @ w + b`` in VMEM and immediately feeds it to the row-wise
+    product expansion — the paper's two-stage formulation in one pass.
+    """
+    r, tau = cols.shape
+    k, f_in = x.shape
+    f_out = w.shape[1]
+    if r % block_rows or k % block_k or f_out % block_f:
+        raise ValueError("operands must be padded to block multiples")
+    out_dtype = out_dtype or jnp.float32
+    interpret = _default_interpret(interpret)
+    k_real = k if k_real is None else k_real
+    grid = (f_out // block_f, k // block_k)
+    ell_spec = pl.BlockSpec((r, tau), lambda fi, kb: (0, 0))
+    x_spec = pl.BlockSpec((block_k, f_in), lambda fi, kb: (kb, 0))
+    w_spec = pl.BlockSpec((f_in, block_f), lambda fi, kb: (0, fi))
+    b_spec = pl.BlockSpec((1, block_f), lambda fi, kb: (0, fi))
+    out_specs = pl.BlockSpec((r, block_f), lambda fi, kb: (0, fi))
+    out_shape = jax.ShapeDtypeStruct((r, f_out), out_dtype)
+    if scales is None:
+        return pl.pallas_call(
+            functools.partial(
+                _fused_dense_kernel, block_rows=block_rows, block_k=block_k,
+                k_real=k_real, cast_xw=cast_xw,
+            ),
+            grid=grid,
+            in_specs=[ell_spec, ell_spec, x_spec, w_spec, b_spec],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(cols, vals, x, w, b)
+    return pl.pallas_call(
+        functools.partial(
+            _fused_dense_kernel_scaled, block_rows=block_rows,
+            block_k=block_k, k_real=k_real, cast_xw=cast_xw,
+        ),
+        grid=grid,
+        in_specs=[
+            ell_spec,
+            ell_spec,
+            pl.BlockSpec((r // block_rows, 1), lambda fi, kb: (0, 0)),
+            x_spec,
+            w_spec,
+            b_spec,
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(cols, vals, _block_scales_2d(scales, r, block_rows), x, w, b)
+
+
+def _fused_sparse_kernel(
+    kb_ids_ref, cols_ref, vals_ref, x_ref, w_ref, b_ref, out_ref,
+    *, block_rows, block_k, k_real, cast_xw,
+):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(kb_ids_ref[s] >= 0)
+    def _step():
+        kb = kb_ids_ref[s]
+        xw = _combine_tile(x_ref, w_ref, b_ref, kb, block_k, k_real, cast_xw)
+        _fused_accumulate(
+            cols_ref[...], vals_ref[...], None, xw, out_ref, kb * block_k,
+            block_rows=block_rows, block_k=block_k,
+        )
+
+
+def _fused_sparse_kernel_scaled(
+    kb_ids_ref, cols_ref, vals_ref, scales_ref, x_ref, w_ref, b_ref, out_ref,
+    *, block_rows, block_k, k_real, cast_xw,
+):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(kb_ids_ref[s] >= 0)
+    def _step():
+        kb = kb_ids_ref[s]
+        xw = _combine_tile(x_ref, w_ref, b_ref, kb, block_k, k_real, cast_xw)
+        _fused_accumulate(
+            cols_ref[...], vals_ref[...], scales_ref[...], xw, out_ref,
+            kb * block_k, block_rows=block_rows, block_k=block_k,
+        )
+
+
+def spmm_ell_fused_sparse_grid(
+    cols: jax.Array,
+    vals: jax.Array,
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    kb_ids: jax.Array,   # (n_steps,) int32 k-tile per grid step, -1 = no-op
+    *,
+    block_rows: int = 128,
+    block_k: int = 128,
+    block_f: int = 128,
+    k_real: Optional[int] = None,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+    scales: Optional[jax.Array] = None,
+    cast_xw=None,
+) -> jax.Array:
+    """Fused launch over a scalar-prefetched occupied-k-tile list.
+
+    ``kb_ids`` comes from :func:`repro.core.dataflow.plan_fused_k_schedule`
+    — every k-tile occupied anywhere, in the same global hot-first order
+    the unfused sparse grid applies per row block.  ``-1`` entries are
+    no-op steps (used to equalize per-shard schedule lengths under
+    ``shard_map``); their index maps clamp to tile 0 and the step body is
+    skipped entirely.
+    """
+    r, tau = cols.shape
+    k, f_in = x.shape
+    f_out = w.shape[1]
+    if r % block_rows or k % block_k or f_out % block_f:
+        raise ValueError("operands must be padded to block multiples")
+    out_dtype = out_dtype or jnp.float32
+    interpret = _default_interpret(interpret)
+    k_real = k if k_real is None else k_real
+    n_steps = int(kb_ids.shape[0])
+    grid = (f_out // block_f, n_steps)
+    ell_spec = pl.BlockSpec((r, tau), lambda fi, s, kb: (0, 0))
+    x_spec = pl.BlockSpec(
+        (block_k, f_in), lambda fi, s, kb: (jnp.maximum(kb[s], 0), 0)
+    )
+    w_spec = pl.BlockSpec((f_in, block_f), lambda fi, s, kb: (0, fi))
+    b_spec = pl.BlockSpec((1, block_f), lambda fi, s, kb: (0, fi))
+    out_specs = pl.BlockSpec((r, block_f), lambda fi, s, kb: (0, fi))
+    out_shape = jax.ShapeDtypeStruct((r, f_out), out_dtype)
+    kernel_kw = dict(
+        block_rows=block_rows, block_k=block_k, k_real=k_real, cast_xw=cast_xw
+    )
+    if scales is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[ell_spec, ell_spec, x_spec, w_spec, b_spec],
+            out_specs=out_specs,
+        )
+        return pl.pallas_call(
+            functools.partial(_fused_sparse_kernel, **kernel_kw),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(kb_ids, cols, vals, x, w, b)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            ell_spec,
+            ell_spec,
+            pl.BlockSpec((r // block_rows, 1), lambda fi, s, kb: (0, 0)),
+            x_spec,
+            w_spec,
+            b_spec,
+        ],
+        out_specs=out_specs,
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_sparse_kernel_scaled, **kernel_kw),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(
+        kb_ids, cols, vals, _block_scales_2d(scales, r, block_rows), x, w, b
+    )
+
+
 def _default_interpret(interpret: Optional[bool]) -> bool:
     if interpret is None:
         return jax.default_backend() != "tpu"

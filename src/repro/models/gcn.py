@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PreprocessResult, preprocess, spmm_ell
+from repro.core import PreprocessResult, preprocess
 from repro.core.sparse_formats import CSRMatrix
 
 
@@ -152,6 +152,10 @@ def gcn_forward(
     # axis — on one device the layouts coincide and the standard replicated
     # output comes back).
     shard_out = out_layout == "row_sharded" and plan.n_shards > 1
+    from repro.exec.dispatch import execute_layer
+    from repro.exec.operands import SpmmOperands
+
+    operands = SpmmOperands.from_ell(graph.pre.ell)
     perm = jnp.asarray(graph.pre.perm)
     x = features[perm]
     n_layers = len(params)
@@ -160,9 +164,10 @@ def gcn_forward(
         layer_plan = plan
         if shard_out and i == n_layers - 1:
             layer_plan = dataclasses.replace(plan, out_layout="row_sharded")
-        # combination (dense); quant.affine is the plain matmul at f32
-        xw = quant.affine(x, p, prec, plan.block_rows)
-        x = spmm_ell(graph.pre.ell, xw, plan=layer_plan)  # aggregation
+        # combination + aggregation under the plan's fusion decision: one
+        # launch when the plan says fused, the classic two otherwise.
+        x = execute_layer(
+            layer_plan, operands, x, p, w_block_rows=plan.block_rows)
         if i < n_layers - 1:
             x = jax.nn.relu(x)
     if shard_out:

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
-from repro.dist.policy import constrain
+from repro.dist.policy import constrain, constrain_ranked
 
 Params = Dict[str, jax.Array]
 
@@ -405,6 +405,12 @@ def init_moe(cfg: ArchConfig, key) -> Params:
     return p
 
 
+EXPERT_BUF_SPECS = (
+    ("model", "data", None), ("model", None, None),
+    (None, ("pod", "data"), None), (None, "data", None),
+)
+
+
 def moe_layer(p: Params, x: jax.Array, moe: MoEConfig) -> jax.Array:
     """Token-dispatch MoE — the paper's SpMM view of expert routing.
 
@@ -414,7 +420,17 @@ def moe_layer(p: Params, x: jax.Array, moe: MoEConfig) -> jax.Array:
     (grid compaction), pad each expert to capacity (the ELL bound), then
     grouped GEMMs — the same machinery as the FlexVector kernel's
     bounded-row schedule, expressed at the XLA level so it shards with
-    expert parallelism (experts axis -> all-to-all).
+    expert parallelism.
+
+    The expert-parallel boundary is the dispatch buffer's placement:
+    tokens enter sharded over the batch (``data``) axis and the buffer is
+    sharded over experts (``model`` axis), so the scatter into it *is*
+    the token->expert all-to-all, and the combine gather on the way out
+    is its inverse.  Both buffers' specs are chosen by
+    :func:`repro.dist.policy.constrain_ranked` — the cost model
+    (``plan.cost.rank_specs``) scores every viable candidate's sync
+    bytes and picks the cheapest decomposition for the active mesh,
+    instead of trusting the hand-written candidate order.
     """
     b, s, d = x.shape
     n = b * s
@@ -444,13 +460,18 @@ def moe_layer(p: Params, x: jax.Array, moe: MoEConfig) -> jax.Array:
     buf = buf.at[flat_e, safe_pos].add(val, mode="drop")
     # expert parallelism: keep the dispatch buffer sharded (E over model
     # when it divides, else capacity over model) — replicating it is a
-    # per-device OOM at production scale.
-    buf = constrain(buf, [("model", "data", None), ("model", None, None),
-                          (None, ("pod", "data"), None), (None, "data", None)])
+    # per-device OOM at production scale.  The spec choice decides the
+    # token->expert all-to-all the compiler lowers the scatter to; ranked
+    # by the cost model rather than first-viable.
+    buf = constrain_ranked(buf, EXPERT_BUF_SPECS)
 
     h = jax.nn.silu(jnp.einsum("ecd,edw->ecw", buf, p["gate"]))
     h = h * jnp.einsum("ecd,edw->ecw", buf, p["up"])
     out_buf = jnp.einsum("ecw,ewd->ecd", h, p["down"])      # (E, cap, D)
+    # combine side of the expert-parallel exchange: the output buffer
+    # stays expert-sharded until the gather below redistributes rows back
+    # to their token shards (the inverse all-to-all).
+    out_buf = constrain_ranked(out_buf, EXPERT_BUF_SPECS)
 
     gathered = out_buf[flat_e, safe_pos]                    # (N*k, D)
     gathered = constrain(

@@ -78,6 +78,7 @@ def choose_plan(
     precisions: Sequence[str] = ("f32",),
     precision_errors: Optional[dict] = None,
     accuracy_budget: Optional[float] = None,
+    f_in: Optional[int] = None,
 ) -> PlanChoice:
     """Pick the argmin-cost plan for one graph + device budget.
 
@@ -100,6 +101,18 @@ def choose_plan(
     error 0.0 by definition and is always admissible; the static f32
     default stays the first candidate, preserving the never-worse
     invariant.
+
+    ``f_in`` (the layer's *input* feature width) switches the search to
+    whole-layer scoring and adds kernel fusion as a search dimension:
+    every candidate is priced as a full GCN layer — unfused as
+    ``spmm_cost + combination_seconds`` (the intermediate activation
+    written and read back), fused as :func:`~repro.plan.cost.fused_layer_cost`
+    (no intermediate traffic, combination recomputed per f-tile) — and
+    fused candidates are admitted only when
+    :func:`~repro.plan.cost.fused_viable` says the resident output slab +
+    ELL table fit VMEM.  The static plan stays the first candidate and is
+    scored unfused, so a fused plan is chosen only when the model prices
+    the whole fused layer strictly below the whole static layer.
     """
     stats = _as_stats(graph)
     errs = dict(precision_errors or {})
@@ -174,12 +187,49 @@ def choose_plan(
             shard_imbalance=width_imbalance(width), device=device,
         )
 
+    def layer_score(impl, br, bk, bf, width, precision, fuse):
+        """(comparison seconds, CostBreakdown receipt) for one candidate.
+
+        Without ``f_in`` the comparison scalar is the SpMM bound alone
+        (historical behavior).  With ``f_in`` it is the whole layer:
+        unfused adds the standalone combination launch (which writes the
+        intermediate activation the SpMM then re-reads); fused is the
+        single-launch estimate with that round trip gone.
+        """
+        if fuse:
+            c = cost_mod.fused_layer_cost(
+                stats, f_in, feature_dim, impl=impl, block_rows=br,
+                block_k=bk, block_f=bf, n_shards=width,
+                dtype_bytes=dtype_bytes, precision=precision,
+                shard_imbalance=width_imbalance(width), device=device,
+            )
+            return c.seconds, c
+        c = score(impl, br, bk, bf, width, precision)
+        if f_in is None:
+            return c.seconds, c
+        comb = cost_mod.combination_seconds(
+            stats.n_dense_rows, f_in, feature_dim,
+            precision=precision, device=device,
+        )
+        return c.seconds + comb, c
+
+    def fuse_options(impl, br, bk, bf, width, precision):
+        if f_in is None or impl == "reference":
+            return (False,)
+        if not cost_mod.fused_viable(
+            stats, f_in, block_rows=br, block_k=bk, block_f=bf,
+            precision=precision, n_shards=width, device=device,
+        ):
+            return (False,)
+        return (False, True)
+
     # The static default leads: what plan_for_config(cfg[, mesh]) builds.
     static_impl = base_impl if (
         schedulable or base_impl != "pallas_sparse") else "pallas"
-    static_cost = score(static_impl, *base_blocks, mesh_width)
-    best = (static_impl, *base_blocks, mesh_width, "f32")
-    best_cost = static_cost
+    static_secs, static_cost = layer_score(
+        static_impl, *base_blocks, mesh_width, "f32", False)
+    best = (static_impl, *base_blocks, mesh_width, "f32", False)
+    best_secs, best_cost = static_secs, static_cost
 
     n_cand = 1
     for impl in impls:
@@ -188,13 +238,16 @@ def choose_plan(
                 for bf in blocks_for(base_blocks[2]):
                     for w in widths:
                         for prec in precs:
-                            n_cand += 1
-                            c = score(impl, br, bk, bf, w, prec)
-                            if c.seconds < best_cost.seconds:
-                                best = (impl, br, bk, bf, w, prec)
-                                best_cost = c
+                            for fuse in fuse_options(
+                                    impl, br, bk, bf, w, prec):
+                                n_cand += 1
+                                s, c = layer_score(
+                                    impl, br, bk, bf, w, prec, fuse)
+                                if s < best_secs:
+                                    best = (impl, br, bk, bf, w, prec, fuse)
+                                    best_secs, best_cost = s, c
 
-    impl, br, bk, bf, width, precision = best
+    impl, br, bk, bf, width, precision, fused = best
     hot_k_first = True
     if impl == "pallas_sparse" and stats.ell is not None:
         hot_k_first = choose_hot_k_first(
@@ -210,7 +263,7 @@ def choose_plan(
     plan = SpmmPlan(
         impl=impl, block_rows=br, block_k=bk, block_f=bf,
         interpret=interpret, mesh=chosen_mesh, hot_k_first=hot_k_first,
-        precision=precision,
+        precision=precision, fused=fused,
     )
     static_plan = SpmmPlan(
         impl=base_impl, block_rows=base_blocks[0], block_k=base_blocks[1],

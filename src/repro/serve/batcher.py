@@ -31,8 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse_formats import PAD_COL
-from repro.core.spmm import spmm_ell_arrays
-from repro.exec import plan_for_config, quant
+from repro.exec import SpmmOperands, plan_for_config, quant
+from repro.exec.dispatch import execute_layer
 from repro.models.gcn import GCNConfig, GCNGraph
 from repro.serve.sampler import SampledSubgraph
 
@@ -152,12 +152,21 @@ class MicroBatcher:
         mesh=None,
         autoplan: bool = False,
         precision: str = "f32",
+        fused: Optional[bool] = None,
     ):
         self.cfg = cfg
         self.ladder = ladder
         self.max_batch = max_batch
         self.max_seeds = max_seeds
         self.interpret = interpret
+        # Kernel fusion per layer: ``None`` leaves the decision to the
+        # planner (``autoplan=True`` lets the pipeline DP fuse layers it
+        # prices cheaper; otherwise plans run unfused as always), ``True``
+        # forces the single-launch fused kernel on every pallas layer,
+        # ``False`` forces two launches everywhere.  The flag is baked
+        # into each rung's trace at first sight, so it never triggers a
+        # post-warmup recompile.
+        self.fused = fused
         # Default storage precision for every rung; per-rung overrides
         # (the engine's accuracy-budgeted warmup choice) land in
         # _bucket_precisions via set_bucket_precision *before* warmup
@@ -245,10 +254,19 @@ class MicroBatcher:
         coalesced forward traces bare arrays with no host-side row split;
         bucket chunks shard at request granularity instead.  Cached per
         (bucket, feature_dim), so the choice is made once and the
-        zero-recompile-after-warmup invariant is untouched.
+        zero-recompile-after-warmup invariant is untouched.  The pipeline
+        planner's DP now weighs a *fused* variant of every layer, so an
+        autoplanned rung may come back with fused per-layer plans; an
+        explicit ``MicroBatcher(fused=...)`` overrides the decision both
+        ways.
         """
         if not self.autoplan:
-            return [self.plan] * self.cfg.n_layers
+            plans = [self.plan] * self.cfg.n_layers
+            if self.fused is not None:
+                plans = [
+                    dataclasses.replace(p, fused=self.fused) for p in plans
+                ]
+            return plans
         key = (bucket, feature_dim)
         plans = self._layer_plans.get(key)
         if plans is None:
@@ -271,6 +289,10 @@ class MicroBatcher:
             plans = [
                 lp.spmm.resolve(schedulable=False) for lp in pplan.layers
             ]
+            if self.fused is not None:
+                plans = [
+                    dataclasses.replace(p, fused=self.fused) for p in plans
+                ]
             self._layer_plans[key] = plans
         return plans
 
@@ -386,21 +408,25 @@ class MicroBatcher:
                 params if prec == "f32"
                 else quant.quantize_params(params, prec, cfg.block_rows)
             )
+            # Operands mirror what spmm_ell_arrays builds: the coalesced
+            # block-diagonal ELL triple with the rung's stored precision.
+            operands = SpmmOperands(
+                cols=cols_f,
+                vals=vals_f,
+                row_map=rmap_f,
+                n_out_rows=b * nodes_b,
+                scales=scales_f,
+                scale_block_rows=(
+                    None if scales_f is None else cfg.block_rows),
+                precision="int8" if scales_f is not None else "f32",
+            )
             x = feats.reshape(b * nodes_b, f_in)
             for i in range(cfg.n_layers):
-                p = qparams[f"layer_{i}"]
-                # combination (dense); quant.affine is the matmul at f32
-                xw = quant.affine(x, p, prec, cfg.block_rows)
-                x = spmm_ell_arrays(
-                    cols_f,
-                    vals_f,
-                    rmap_f,
-                    xw,
-                    n_out_rows=b * nodes_b,
-                    plan=layer_plans[i],
-                    scales=scales_f,
-                    scale_block_rows=(
-                        None if scales_f is None else cfg.block_rows),
+                # combination + aggregation under the layer plan's fusion
+                # decision: one launch when fused, the classic two when not.
+                x = execute_layer(
+                    layer_plans[i], operands, x, qparams[f"layer_{i}"],
+                    w_block_rows=cfg.block_rows,
                 )
                 if i < cfg.n_layers - 1:
                     x = jax.nn.relu(x)

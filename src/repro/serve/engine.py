@@ -91,6 +91,7 @@ class ServeEngine:
         ladder_growth=None,
         precision: str = "f32",
         accuracy_budget: float = 0.05,
+        fused: Optional[bool] = None,
     ):
         from repro.exec import quant
 
@@ -147,6 +148,7 @@ class ServeEngine:
             mesh=mesh,
             autoplan=autoplan,
             precision=self._static_precision,
+            fused=fused,
         )
         self.timings: Dict[str, List[float]] = {}
         self.seeds_served: Dict[str, int] = {}
