@@ -55,6 +55,7 @@ def bench_level(
     capacity: int,
     seeds_per_request: int,
     rng: np.random.Generator,
+    tracer=None,
 ) -> dict:
     from repro.runtime import run_open_loop
 
@@ -63,7 +64,7 @@ def bench_level(
                    replace=False)
         for _ in range(n_requests)
     ]
-    with engine.runtime(capacity=capacity) as rt:
+    with engine.runtime(capacity=capacity, tracer=tracer) as rt:
         wall = run_open_loop(
             rt,
             requests,
@@ -93,6 +94,44 @@ def bench_level(
     }
 
 
+def bench_trace_overhead(
+    engine,
+    qps: float,
+    n_requests: int,
+    deadline_ms: float,
+    capacity: int,
+    seeds_per_request: int,
+    repeats: int = 2,
+) -> dict:
+    """p50 with tracing on vs off, same load, alternating runs.
+
+    Takes the *min* of each mode's p50s across ``repeats`` rounds —
+    the min is the least-noisy location statistic for a latency floor —
+    and reports their ratio.  The obs contract is that tracing stays in
+    the noise: the CI gate (``--check``) asserts ratio <= 1.05.
+    """
+    from repro.obs import Tracer
+
+    p50_off, p50_on = [], []
+    for i in range(repeats):
+        for traced in (False, True):
+            rng = np.random.default_rng(100 + i)
+            tracer = Tracer() if traced else None
+            rec = bench_level(engine, qps, n_requests, deadline_ms,
+                              capacity, seeds_per_request, rng,
+                              tracer=tracer)
+            (p50_on if traced else p50_off).append(rec["p50_ms"])
+    off = min(p50_off)
+    on = min(p50_on)
+    return {
+        "qps": qps,
+        "repeats": repeats,
+        "p50_ms_untraced": off,
+        "p50_ms_traced": on,
+        "p50_ratio": on / max(off, 1e-9),
+    }
+
+
 def run(
     csv=print,
     smoke: bool = True,
@@ -103,6 +142,8 @@ def run(
     fanout: int = 8,
     max_batch: int = 8,
     seeds_per_request: int = 2,
+    trace_overhead: bool = False,
+    check: bool = False,
 ) -> dict:
     csv("qps,offered,completed,shed,shed_rate,p50_ms,p99_ms,"
         "goodput_rps,slo_attainment")
@@ -121,6 +162,18 @@ def run(
             f"{rec['slo_attainment']:.3f}")
     payload = {"benchmark": "queue_async", "smoke": smoke,
                "deadline_ms": deadline_ms, "records": records}
+    if trace_overhead:
+        ov = bench_trace_overhead(
+            engine, (SMOKE_QPS if smoke else FULL_QPS)[0], n_requests,
+            deadline_ms, capacity, seeds_per_request)
+        payload["trace_overhead"] = ov
+        csv(f"trace_overhead,p50_off={ov['p50_ms_untraced']:.2f}ms,"
+            f"p50_on={ov['p50_ms_traced']:.2f}ms,"
+            f"ratio={ov['p50_ratio']:.3f}")
+        if check:
+            assert ov["p50_ratio"] <= 1.05, (
+                f"tracing overhead gate: traced p50 is "
+                f"{ov['p50_ratio']:.3f}x untraced (limit 1.05x)")
     os.makedirs(BENCH_DIR, exist_ok=True)
     json_path = os.path.join(BENCH_DIR, "queue_async.json")
     with open(json_path, "w") as f:
@@ -136,9 +189,16 @@ def main() -> None:
                     help="requests per offered-load level")
     ap.add_argument("--deadline-ms", type=float, default=200.0)
     ap.add_argument("--capacity", type=int, default=64)
+    ap.add_argument("--trace-overhead", action="store_true",
+                    help="also measure p50 with repro.obs tracing on vs "
+                         "off at the lowest offered-load level")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if traced p50 exceeds 1.05x untraced "
+                         "(the obs overhead gate)")
     args = ap.parse_args()
     run(smoke=args.smoke or not args.full, n_requests=args.requests,
-        deadline_ms=args.deadline_ms, capacity=args.capacity)
+        deadline_ms=args.deadline_ms, capacity=args.capacity,
+        trace_overhead=args.trace_overhead, check=args.check)
 
 
 if __name__ == "__main__":

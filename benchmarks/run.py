@@ -10,6 +10,12 @@ record per bench to ``results/bench/BENCH_summary.json``
 (``REPRO_BENCH_DIR`` to relocate) — an append-only log of ``{run_at,
 bench, seconds, ok, summary}`` rows, so regressions across runs are
 greppable from one file without re-parsing each bench's own output.
+
+The same run also exports a unified telemetry snapshot through
+``repro.obs.export``: per-bench duration histograms and ok/failed
+counters land in ``BENCH_metrics.json`` and (Prometheus text format)
+``BENCH_metrics.prom`` beside the summary, written even when a bench
+fails so a broken run still leaves its telemetry behind.
 """
 
 import json
@@ -38,6 +44,19 @@ from benchmarks import (  # noqa: E402
 
 BENCH_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
 SUMMARY_PATH = os.path.join(BENCH_DIR, "BENCH_summary.json")
+METRICS_JSON_PATH = os.path.join(BENCH_DIR, "BENCH_metrics.json")
+METRICS_PROM_PATH = os.path.join(BENCH_DIR, "BENCH_metrics.prom")
+
+
+def export_metrics(registry,
+                   json_path: str = METRICS_JSON_PATH,
+                   prom_path: str = METRICS_PROM_PATH) -> None:
+    """Write the harness registry in both obs export formats."""
+    from repro.obs import write_metrics_json, write_prometheus
+
+    os.makedirs(os.path.dirname(json_path), exist_ok=True)
+    write_metrics_json(json_path, registry)
+    write_prometheus(prom_path, registry)
 
 
 def _jsonable(value):
@@ -73,9 +92,12 @@ def append_summary(records, path: str = SUMMARY_PATH) -> None:
 
 
 def main() -> None:
+    from repro.runtime.metrics import MetricsRegistry, labeled
+
     t0 = time.time()
     run_at = time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime())
     print(f"# datasets: {os.environ.get('REPRO_DATASETS', 'all five')}")
+    metrics = MetricsRegistry()
     records = []
     for name, mod in [
         ("Fig 9 (area)", bench_area),
@@ -95,8 +117,8 @@ def main() -> None:
     ]:
         print(f"\n## {name}")
         t = time.time()
-        rec = {"run_at": run_at, "bench": mod.__name__.split(".")[-1],
-               "title": name}
+        bench = mod.__name__.split(".")[-1]
+        rec = {"run_at": run_at, "bench": bench, "title": name}
         try:
             rec["summary"] = _jsonable(mod.run())
             rec["ok"] = True
@@ -105,14 +127,24 @@ def main() -> None:
             rec["error"] = f"{type(e).__name__}: {e}"
             rec["seconds"] = round(time.time() - t, 2)
             records.append(rec)
+            metrics.inc("bench_failed")
+            metrics.inc(labeled("bench_failed", bench=bench))
+            metrics.observe(labeled("bench_s", bench=bench),
+                            time.time() - t)
             append_summary(records)
+            export_metrics(metrics)
             raise
         rec["seconds"] = round(time.time() - t, 2)
         records.append(rec)
+        metrics.inc("bench_ok")
+        metrics.inc(labeled("bench_ok", bench=bench))
+        metrics.observe(labeled("bench_s", bench=bench), rec["seconds"])
         print(f"# ({rec['seconds']:.1f}s)")
     append_summary(records)
+    export_metrics(metrics)
     print(f"\n# total {time.time() - t0:.1f}s "
-          f"(summary -> {SUMMARY_PATH})")
+          f"(summary -> {SUMMARY_PATH}, metrics -> {METRICS_JSON_PATH} "
+          f"+ {METRICS_PROM_PATH})")
 
 
 if __name__ == "__main__":

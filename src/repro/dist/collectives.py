@@ -30,7 +30,7 @@ parsing HLO.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any, Callable, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -122,10 +122,18 @@ class CollectiveLedger:
 
     counts: Dict[str, int] = dataclasses.field(default_factory=dict)
     bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: Observers called as ``listener(kind, nbytes, n)`` on every record.
+    #: ``repro.obs`` registers one to adopt ledger records as span
+    #: events; listeners never affect the tallies and ``reset`` leaves
+    #: them installed.
+    listeners: List[Callable[[str, float, int], None]] = dataclasses.field(
+        default_factory=list)
 
     def record(self, kind: str, nbytes: float, n: int = 1) -> None:
         self.counts[kind] = self.counts.get(kind, 0) + n
         self.bytes[kind] = self.bytes.get(kind, 0.0) + float(nbytes)
+        for listener in self.listeners:
+            listener(kind, float(nbytes), n)
 
     def record_fused_writeback(self, saved_bytes: float) -> None:
         """Ledger a fused layer's activation writeback: zero bytes, recorded.

@@ -12,6 +12,14 @@ each replica against the median of the replicas that are still alive:
 A replica whose ratio recovers below ``warn_factor`` resets its patience
 streak — transient slowness (GC pause, checkpoint write) never drops a
 replica; only sustained drop-level slowness does.
+
+Pass a ``MetricsRegistry`` (``metrics=``) and the monitor publishes its
+internal state as gauges after every ``observe`` — per-replica step-time
+EWMAs (``straggler_step_ewma_s{replica=i}``) and liveness
+(``straggler_alive{replica=i}``) — so trainer and (future)
+replica-router decisions are inspectable, not just acted on.  The
+registry import is deferred to keep ``dist`` free of module-load
+upward imports.
 """
 
 from __future__ import annotations
@@ -31,15 +39,39 @@ class StragglerVerdict:
 
 class StragglerMonitor:
     def __init__(self, n_replicas: int, warn_factor: float = 2.0,
-                 drop_factor: float = 4.0, patience: int = 2):
+                 drop_factor: float = 4.0, patience: int = 2, *,
+                 metrics=None, ewma: float = 0.3):
         if drop_factor < warn_factor:
             raise ValueError("drop_factor must be >= warn_factor")
+        if not 0.0 < ewma <= 1.0:
+            raise ValueError(f"ewma must be in (0, 1], got {ewma}")
         self.n_replicas = n_replicas
         self.warn_factor = float(warn_factor)
         self.drop_factor = float(drop_factor)
         self.patience = int(patience)
+        self.metrics = metrics
+        self.ewma = float(ewma)
         self._streak = np.zeros(n_replicas, dtype=np.int64)
         self._dropped = np.zeros(n_replicas, dtype=bool)
+        self._ewma_s = np.zeros(n_replicas, dtype=np.float64)
+        self._seen = False
+
+    def step_ewma_s(self) -> np.ndarray:
+        """Per-replica EWMA of observed step seconds (0.0 until fed)."""
+        return self._ewma_s.copy()
+
+    def _publish(self) -> None:
+        if self.metrics is None:
+            return
+        from repro.runtime.metrics import labeled
+
+        for r in range(self.n_replicas):
+            self.metrics.set_gauge(
+                labeled("straggler_step_ewma_s", replica=str(r)),
+                float(self._ewma_s[r]))
+            self.metrics.set_gauge(
+                labeled("straggler_alive", replica=str(r)),
+                0.0 if self._dropped[r] else 1.0)
 
     def observe(self, step_times: Sequence[float]) -> List[StragglerVerdict]:
         """Feed one per-replica step-time vector; returns new verdicts."""
@@ -47,6 +79,17 @@ class StragglerMonitor:
         if times.shape != (self.n_replicas,):
             raise ValueError(
                 f"expected {self.n_replicas} step times, got {times.shape}")
+        if self._seen:
+            self._ewma_s = (1.0 - self.ewma) * self._ewma_s \
+                + self.ewma * times
+        else:
+            self._ewma_s = times.copy()
+            self._seen = True
+        verdicts = self._judge(times)
+        self._publish()
+        return verdicts
+
+    def _judge(self, times: np.ndarray) -> List[StragglerVerdict]:
         alive = ~self._dropped
         if not alive.any():
             return []

@@ -209,8 +209,36 @@ def execute_layer(
     plans (the fused launch keeps the full feature slab VMEM-resident).
     ``layer`` holds ``"w"``/``"b"`` and optionally ``"w_scale"`` with
     ``w_block_rows`` granularity (see ``quant.quantize_params``).
+
+    When a ``repro.obs`` span is active on this thread (eager path
+    only — traced operands never observe host state), the layer runs
+    under an ``execute_layer`` child span stamped with the resolved
+    plan's attributes, and the ledger records fired inside land on it
+    as events.
     """
     plan = plan.resolve(schedulable=operands.schedulable)
+    span = None
+    if operands.concrete and not isinstance(x, jax.core.Tracer):
+        from repro.obs.trace import start_layer_span  # deferred: no cycle
+
+        span = start_layer_span(plan)
+    try:
+        return _execute_layer_inner(
+            plan, operands, x, layer, w_block_rows=w_block_rows
+        )
+    finally:
+        if span is not None:
+            span.finish()
+
+
+def _execute_layer_inner(
+    plan: SpmmPlan,
+    operands: SpmmOperands,
+    x: jax.Array,
+    layer: dict,
+    *,
+    w_block_rows: int,
+) -> jax.Array:
     if (
         plan.fused
         and plan.effective_impl != "reference"

@@ -29,6 +29,7 @@ from repro.fleet.servable import (
 )
 from repro.fleet.tenancy import (
     InflightLimitError,
+    MethodDeniedError,
     QuotaExceededError,
     TenantAdmissionError,
     TenantPolicy,
@@ -53,6 +54,7 @@ __all__ = [
     "TenantAdmissionError",
     "QuotaExceededError",
     "InflightLimitError",
+    "MethodDeniedError",
     "TenantLoad",
     "run_open_loop_mix",
 ]

@@ -40,6 +40,7 @@ from typing import Dict, List, Optional, Sequence
 from repro.fleet.servable import Servable
 from repro.fleet.tenancy import (
     InflightLimitError,
+    MethodDeniedError,
     QuotaExceededError,
     TenantPolicy,
     TenantTable,
@@ -213,11 +214,16 @@ class FleetRuntime:
         max_wait_s: Optional[float] = 0.05,
         close_margin_s: Optional[float] = None,
         weights: Optional[Dict[str, float]] = None,
+        tracer=None,
     ):
         self.manager = manager
         self.tenants = tenants or TenantTable()
         self.clock = clock or RealClock()
         self.metrics = metrics or MetricsRegistry()
+        # Optional repro.obs Tracer: every submit then yields one complete
+        # trace (admission, queue wait, execute, per-layer spans), same
+        # contract as ServeRuntime's.
+        self.tracer = tracer
         self.estimator = FleetEstimator(manager)
         self.queue = RequestQueue(
             capacity=capacity,
@@ -240,13 +246,39 @@ class FleetRuntime:
             picker=WeightedFairPicker(
                 flow_of=lambda b: b.bucket.servable, weights=weights),
         )
-        self.loop = RuntimeLoop(self.scheduler, self._run_batch,
-                                name="repro-fleet")
+        self.loop = RuntimeLoop(
+            self.scheduler, self._run_batch, name="repro-fleet",
+            batch_info=(self._batch_info if tracer is not None else None))
 
     # ------------------------------------------------------------------
 
+    def _batch_info(self, batch: ClosedBatch) -> dict:
+        """Plan attributes for traced batches.  GCN servables expose
+        their engine; other kinds trace without plan attrs (``{}``)."""
+        engine = getattr(
+            self.manager.servable(batch.bucket.servable), "engine", None)
+        if engine is None:
+            return {}
+        from repro.obs.trace import engine_batch_info  # deferred: no cycle
+
+        info = engine_batch_info(engine, batch.bucket.inner)
+        info["attrs"] = dict(info["attrs"],
+                             servable=batch.bucket.servable)
+        return info
+
     def _run_batch(self, batch: ClosedBatch) -> List:
         sv = self.manager.resolve(batch.bucket.servable)
+        if self.tracer is not None:
+            engine = getattr(sv, "engine", None)
+            if engine is not None:
+                # Host-side modeled DRAM ledgering (the AOT executables
+                # never fire eager records); gated on tracing so untraced
+                # fleets leave the global LEDGER untouched.
+                engine.batcher.record_batch_dram(
+                    batch.bucket.inner,
+                    self.scheduler.padded_width(len(batch.requests),
+                                                batch.bucket),
+                    int(engine.features.shape[1]))
         return sv.run_batch([r.padded for r in batch.requests])
 
     def submit(
@@ -264,14 +296,19 @@ class FleetRuntime:
         ``priority``/``deadline`` default from the tenant's policy (its
         SLO class); explicit arguments override per request.  Raises an
         ``AdmissionError`` subclass on any rejection — unknown servable,
-        tenant quota/inflight, queue full, infeasible deadline — and the
-        same exception lands on the returned-future path, so both call
-        shapes observe one verdict.
+        tenant ACL/quota/inflight, queue full, infeasible deadline — and
+        the same exception lands on the returned-future path, so both
+        call shapes observe one verdict.
         """
         if deadline_s is not None and deadline is not None:
             raise ValueError("pass deadline_s (relative) or deadline "
                              "(absolute), not both")
         t0 = self.clock.now()
+        trace = None
+        if self.tracer is not None:
+            trace = self.tracer.trace(
+                "request", servable=servable, tenant=tenant,
+                n_seeds=len(payload))
         if not self.manager.knows(servable):
             # Short-circuit before prepare(): there is no servable to
             # prepare against.  queue.submit() normally counts
@@ -282,8 +319,23 @@ class FleetRuntime:
             if tenant is not None:
                 self.metrics.inc(labeled(
                     "rejected_unknown_servable", tenant=tenant))
+            if trace is not None:
+                trace.finish(status="rejected_unknown_servable", at=t0)
             raise UnknownServableError(
                 f"graph_key {servable!r} matches no known servable")
+        try:
+            # ACL before the token bucket: a denied call never burns the
+            # tenant's quota.
+            self.tenants.check_method(tenant, servable)
+        except MethodDeniedError:
+            self.metrics.inc("submitted")
+            self.metrics.inc("rejected_acl")
+            if tenant is not None:
+                self.metrics.inc(labeled(
+                    "rejected_acl", tenant=tenant, servable=servable))
+            if trace is not None:
+                trace.finish(status="rejected_acl", at=t0)
+            raise
         pol = self.tenants.policy(tenant)
         if priority is None:
             priority = pol.priority
@@ -298,19 +350,28 @@ class FleetRuntime:
             self.metrics.inc(counter)
             if tenant is not None:
                 self.metrics.inc(labeled(counter, tenant=tenant))
+            if trace is not None:
+                trace.finish(status=counter, at=t0)
             raise
         sv = self.manager.resolve(servable)
         prepared = sv.prepare(payload)
+        t_prep = self.clock.now()
+        abs_deadline = (t0 + deadline_s if deadline_s is not None
+                        else deadline)
+        if trace is not None:
+            trace.root.set(priority=priority, deadline=abs_deadline)
+            trace.span("prepare", start=t0,
+                       bucket=str(prepared.bucket)).finish(at=t_prep)
         req = Request(
             graph_key=servable,
             seeds=tuple(int(x) for x in payload),
-            deadline=(t0 + deadline_s if deadline_s is not None
-                      else deadline),
+            deadline=abs_deadline,
             priority=priority,
             tenant=tenant,
+            trace=trace,
             bucket=FleetBucket(servable, prepared.bucket),
             padded=prepared,
-            prep_s=self.clock.now() - t0,
+            prep_s=t_prep - t0,
         )
         # The inflight slot returns when the future resolves by ANY path
         # — result, failure, shed, cancel — which is exactly the set of
@@ -407,14 +468,16 @@ def fleet_from_config(
     *,
     clock: Optional[Clock] = None,
     metrics: Optional[MetricsRegistry] = None,
+    tracer=None,
 ) -> FleetRuntime:
     """A runnable fleet from the ``--fleet-config`` JSON schema.
 
     ``{"servables": [spec, ...], "capacity_units": 8.0, "tenants":
     [{"name": ..., "priority": ..., "qps": ..., "burst": ...,
-    "max_inflight": ..., "deadline_s": ...}, ...], "weights": {key:
-    w, ...}, "queue_capacity": 256, "max_wait_s": 0.05}`` — every
-    section optional except ``servables``.
+    "max_inflight": ..., "deadline_s": ..., "allowed_methods":
+    [...]}, ...], "weights": {key: w, ...}, "queue_capacity": 256,
+    "max_wait_s": 0.05}`` — every section optional except
+    ``servables``.
     """
     manager = FleetManager(
         capacity_units=float(config.get("capacity_units", 8.0)),
@@ -432,4 +495,5 @@ def fleet_from_config(
         metrics=metrics,
         max_wait_s=config.get("max_wait_s", 0.05),
         weights=config.get("weights"),
+        tracer=tracer,
     )

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, Iterable, Optional
+from typing import Dict, Iterable, Optional, Tuple
 
 from repro.runtime.queue import AdmissionError
 
@@ -39,6 +39,10 @@ class InflightLimitError(TenantAdmissionError):
     pass
 
 
+class MethodDeniedError(TenantAdmissionError):
+    """The tenant's ACL does not allow the requested servable/method."""
+
+
 @dataclasses.dataclass(frozen=True)
 class TenantPolicy:
     """One tenant's contract with the fleet.
@@ -49,6 +53,12 @@ class TenantPolicy:
     are the defaults applied to the tenant's requests when the submit
     call doesn't override them (the SLO class, in the existing
     ``Request.priority``/deadline vocabulary).
+
+    ``allowed_methods`` is the tenant's ACL over servable names:
+    ``None`` (the default) allows every method, a tuple allows exactly
+    those names — so an empty tuple denies everything.  Enforced at
+    fleet admission *before* the quota check, so a denied call never
+    burns tokens.
     """
 
     name: str
@@ -57,6 +67,7 @@ class TenantPolicy:
     burst: float = 1.0
     max_inflight: Optional[int] = None
     deadline_s: Optional[float] = None
+    allowed_methods: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
         if self.qps is not None and self.qps <= 0:
@@ -66,6 +77,12 @@ class TenantPolicy:
         if self.max_inflight is not None and self.max_inflight < 1:
             raise ValueError(
                 f"max_inflight must be >= 1 or None, got {self.max_inflight}")
+        if self.allowed_methods is not None and \
+                not isinstance(self.allowed_methods, tuple):
+            # accept lists from config files; the policy stays hashable
+            object.__setattr__(
+                self, "allowed_methods",
+                tuple(str(m) for m in self.allowed_methods))
 
 
 @dataclasses.dataclass
@@ -114,6 +131,18 @@ class TenantTable:
             st = _TenantState(tokens=float(pol.burst))
             self._state[tenant] = st
         return st
+
+    def check_method(self, tenant: Optional[str], method: str) -> None:
+        """Raise :class:`MethodDeniedError` unless the tenant's ACL
+        allows ``method`` (a servable name).  Stateless — safe to call
+        before ``acquire`` so denials never consume quota."""
+        pol = self.policy(tenant)
+        if pol.allowed_methods is not None and \
+                method not in pol.allowed_methods:
+            name = tenant if tenant is not None else self.default.name
+            raise MethodDeniedError(
+                f"tenant {name!r} may not call {method!r} "
+                f"(allowed: {list(pol.allowed_methods)})")
 
     def acquire(self, tenant: Optional[str], now: float) -> None:
         """Admit one request for ``tenant`` at clock reading ``now`` or

@@ -18,7 +18,7 @@ import numpy as np
 from repro.serve import ServeEngine
 
 
-def build_engine(args) -> ServeEngine:
+def build_engine(args, feedback=None) -> ServeEngine:
     mesh = None
     if args.mesh > 1:
         from repro.launch.mesh import make_data_mesh
@@ -41,7 +41,34 @@ def build_engine(args) -> ServeEngine:
         ladder_growth=growth,
         precision=args.precision,
         accuracy_budget=args.accuracy_budget,
+        feedback=feedback,
     )
+
+
+def make_tracer(args):
+    """One Tracer when any trace/metrics export is requested, else None —
+    tracing off keeps the serving hot path exactly as before."""
+    if not (args.trace_json or args.metrics_prom):
+        return None
+    from repro.obs import Tracer
+
+    return Tracer()
+
+
+def export_observability(args, tracer, metrics) -> None:
+    """Write the requested trace/metrics artifacts after a run."""
+    from repro.obs import write_metrics_json, write_prometheus, \
+        write_traces_json
+
+    if tracer is not None and args.trace_json:
+        n = write_traces_json(args.trace_json, tracer.drain())
+        print(f"[obs] {n} traces written to {args.trace_json}")
+    if args.metrics_prom:
+        write_prometheus(args.metrics_prom, metrics)
+        print(f"[obs] prometheus metrics written to {args.metrics_prom}")
+    if args.metrics_json:
+        write_metrics_json(args.metrics_json, metrics)
+        print(f"[metrics] snapshot written to {args.metrics_json}")
 
 
 def run_async_scenario(engine: ServeEngine, requests, args) -> None:
@@ -51,7 +78,8 @@ def run_async_scenario(engine: ServeEngine, requests, args) -> None:
     """
     from repro.runtime import run_open_loop
 
-    with engine.runtime(capacity=args.queue_capacity) as rt:
+    tracer = make_tracer(args)
+    with engine.runtime(capacity=args.queue_capacity, tracer=tracer) as rt:
         wall = run_open_loop(
             rt,
             requests,
@@ -75,9 +103,11 @@ def run_async_scenario(engine: ServeEngine, requests, args) -> None:
         f"goodput {goodput:.1f} req/s; batches "
         f"full={c['batches_full']} deadline={c['batches_deadline']}"
     )
-    if args.metrics_json:
-        rt.metrics.write_json(args.metrics_json)
-        print(f"[metrics] snapshot written to {args.metrics_json}")
+    if engine.feedback is not None and args.plan_feedback:
+        engine.feedback.save(args.plan_feedback)
+        print(f"[obs] {len(engine.feedback)} measured plan latencies "
+              f"saved to {args.plan_feedback}")
+    export_observability(args, tracer, rt.metrics)
 
 
 def run_fleet_scenario(args) -> None:
@@ -112,7 +142,8 @@ def run_fleet_scenario(args) -> None:
 
     with open(args.fleet_config) as f:
         config = json.load(f)
-    rt = fleet_from_config(config)
+    tracer = make_tracer(args)
+    rt = fleet_from_config(config, tracer=tracer)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for key in rt.manager.keys():
@@ -170,9 +201,7 @@ def run_fleet_scenario(args) -> None:
         print(f"  tenant {t} -> {load.servable}: slo {met}/{met + missed} "
               f"met, quota-shed {quota}, e2e p50 {e2e['p50']:.2f} ms "
               f"p99 {e2e['p99']:.2f} ms")
-    if args.metrics_json:
-        rt.metrics.write_json(args.metrics_json)
-        print(f"[metrics] snapshot written to {args.metrics_json}")
+    export_observability(args, tracer, rt.metrics)
 
 
 def main() -> None:
@@ -235,6 +264,19 @@ def main() -> None:
     ap.add_argument("--metrics-json", default=None,
                     help="write the runtime metrics snapshot to this path "
                          "after --runtime-async")
+    ap.add_argument("--trace-json", default=None,
+                    help="turn on repro.obs request tracing and write the "
+                         "drained traces (JSON) to this path after the "
+                         "async/fleet run")
+    ap.add_argument("--metrics-prom", default=None,
+                    help="write the metrics snapshot in Prometheus text "
+                         "exposition format to this path after the "
+                         "async/fleet run")
+    ap.add_argument("--plan-feedback", default=None,
+                    help="path of a repro.obs PlanFeedback store: loaded "
+                         "before warmup (measured latencies steer autoplan) "
+                         "and re-saved with this run's measurements after "
+                         "--runtime-async")
     ap.add_argument("--fleet-config", default=None,
                     help="JSON file describing a multi-tenant servable "
                          "fleet (servables + tenant policies + loads); "
@@ -246,7 +288,14 @@ def main() -> None:
         run_fleet_scenario(args)
         return
 
-    engine = build_engine(args)
+    feedback = None
+    if args.plan_feedback:
+        from repro.obs import PlanFeedback
+
+        feedback = PlanFeedback.load(args.plan_feedback)
+        print(f"[obs] plan feedback loaded from {args.plan_feedback}: "
+              f"{len(feedback)} measured (bucket, plan) entries")
+    engine = build_engine(args, feedback=feedback)
     t0 = time.perf_counter()
     built = engine.warmup(max_nodes=args.warmup_max_nodes or None)
     reg = engine.registry.stats

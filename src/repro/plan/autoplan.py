@@ -32,6 +32,9 @@ class PlanChoice:
     static_plan: SpmmPlan
     static_cost: cost_mod.CostBreakdown
     n_candidates: int
+    #: How many candidates were priced by a measured-latency feedback
+    #: entry instead of the DeviceModel (0 = purely modeled decision).
+    measured_used: int = 0
 
     def describe(self) -> str:
         p = self.plan
@@ -79,6 +82,8 @@ def choose_plan(
     precision_errors: Optional[dict] = None,
     accuracy_budget: Optional[float] = None,
     f_in: Optional[int] = None,
+    feedback=None,
+    feedback_key: Optional[str] = None,
 ) -> PlanChoice:
     """Pick the argmin-cost plan for one graph + device budget.
 
@@ -113,6 +118,20 @@ def choose_plan(
     ELL table fit VMEM.  The static plan stays the first candidate and is
     scored unfused, so a fused plan is chosen only when the model prices
     the whole fused layer strictly below the whole static layer.
+
+    ``feedback`` + ``feedback_key`` close ROADMAP item 5's loop: when a
+    :class:`~repro.obs.feedback.PlanFeedback` store holds a measured
+    execute-latency EWMA for a candidate (keyed by ``feedback_key`` —
+    the serving bucket identity — and the candidate's
+    :func:`~repro.obs.feedback.plan_key`), the *measurement* replaces
+    the modeled seconds in the comparison; candidates without a
+    measurement keep their DeviceModel price (cold-start fallback).
+    The static default is re-priced by its own measurement first, so
+    the never-worse invariant is kept against measured cost whenever
+    measurements exist.  Mixing measured seconds with modeled
+    comparison-units is the standard cold-start compromise (same shape
+    as ``BucketEstimator``); it converges as measurement coverage
+    grows.
     """
     stats = _as_stats(graph)
     errs = dict(precision_errors or {})
@@ -223,11 +242,30 @@ def choose_plan(
             return (False,)
         return (False, True)
 
+    measured_used = 0
+
+    def with_measured(modeled, impl, br, bk, bf, w, prec, fuse):
+        """A candidate's comparison scalar: measured EWMA if one exists,
+        else the modeled seconds (cold-start fallback)."""
+        nonlocal measured_used
+        if feedback is None or feedback_key is None:
+            return modeled
+        from repro.obs.feedback import plan_key  # deferred: no cycle
+
+        m = feedback.measured(
+            feedback_key, plan_key(impl, br, bk, bf, w, prec, fuse))
+        if m is None:
+            return modeled
+        measured_used += 1
+        return m
+
     # The static default leads: what plan_for_config(cfg[, mesh]) builds.
     static_impl = base_impl if (
         schedulable or base_impl != "pallas_sparse") else "pallas"
     static_secs, static_cost = layer_score(
         static_impl, *base_blocks, mesh_width, "f32", False)
+    static_secs = with_measured(
+        static_secs, static_impl, *base_blocks, mesh_width, "f32", False)
     best = (static_impl, *base_blocks, mesh_width, "f32", False)
     best_secs, best_cost = static_secs, static_cost
 
@@ -243,6 +281,8 @@ def choose_plan(
                                 n_cand += 1
                                 s, c = layer_score(
                                     impl, br, bk, bf, w, prec, fuse)
+                                s = with_measured(
+                                    s, impl, br, bk, bf, w, prec, fuse)
                                 if s < best_secs:
                                     best = (impl, br, bk, bf, w, prec, fuse)
                                     best_secs, best_cost = s, c
@@ -272,6 +312,7 @@ def choose_plan(
     return PlanChoice(
         plan=plan, cost=best_cost, static_plan=static_plan,
         static_cost=static_cost, n_candidates=n_cand,
+        measured_used=measured_used,
     )
 
 

@@ -12,7 +12,12 @@ under test.
 from repro.runtime.clock import Clock, RealClock, VirtualClock
 from repro.runtime.loadgen import run_open_loop
 from repro.runtime.loop import RuntimeLoop, ServeRuntime
-from repro.runtime.metrics import Histogram, MetricsRegistry, labeled
+from repro.runtime.metrics import (
+    Histogram,
+    MetricsRegistry,
+    labeled,
+    parse_labeled,
+)
 from repro.runtime.queue import (
     AdmissionError,
     BucketEstimator,
@@ -38,6 +43,7 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "labeled",
+    "parse_labeled",
     "AdmissionError",
     "QueueFullError",
     "DeadlineInfeasibleError",

@@ -57,12 +57,23 @@ class RuntimeLoop:
         clock: Optional[Clock] = None,
         metrics: Optional[MetricsRegistry] = None,
         name: str = "repro-runtime",
+        batch_info: Optional[Callable[[ClosedBatch], dict]] = None,
+        feedback=None,
     ):
         self.scheduler = scheduler
         self.runner = runner
         self.clock = clock or scheduler.clock
         self.metrics = metrics or scheduler.metrics
         self.name = name
+        # Optional observability hooks (both None when tracing/feedback
+        # are off, keeping the hot path unchanged):
+        # * batch_info(batch) -> {"bucket_key", "plan_key", "attrs",
+        #   "layers"} describing the plans serving this batch — see
+        #   repro.obs.trace.engine_batch_info;
+        # * feedback: a repro.obs.feedback.PlanFeedback fed one measured
+        #   (bucket_key, plan_key, exec seconds, padded batch) per batch.
+        self.batch_info = batch_info
+        self.feedback = feedback
         self._cond = threading.Condition()
         self._stop = False
         self._thread: Optional[threading.Thread] = None
@@ -93,9 +104,26 @@ class RuntimeLoop:
             executed += 1
         return executed
 
+    @staticmethod
+    def _fail_traces(requests: Sequence[Request], error: str,
+                     at: float) -> None:
+        for r in requests:
+            if r.trace is not None:
+                r.trace.finish(status="failed", at=at, error=error)
+
     def execute(self, batch: ClosedBatch) -> None:
         """Run one batch; on failure, fail only this batch's futures."""
         live = [r for r in batch.requests if not r.future.cancelled()]
+        traced = any(r.trace is not None for r in live)
+        info = None
+        if (traced or self.feedback is not None) \
+                and self.batch_info is not None:
+            info = self.batch_info(batch)
+        ledger_before = None
+        if traced:
+            from repro.dist.collectives import LEDGER
+
+            ledger_before = (dict(LEDGER.counts), dict(LEDGER.bytes))
         t0 = self.clock.now()
         try:
             outputs = self.runner(batch)
@@ -110,6 +138,8 @@ class RuntimeLoop:
                     self.metrics.inc(labeled("failed", tenant=r.tenant,
                                              servable=r.graph_key))
             self.metrics.inc("failed", len(live))
+            self._fail_traces(live, f"{type(e).__name__}: {e}",
+                              self.clock.now())
             return
         if len(outputs) != len(batch.requests):
             # A buggy runner must not strand the unmatched tail futures.
@@ -123,14 +153,30 @@ class RuntimeLoop:
                     except InvalidStateError:
                         continue
             self.metrics.inc("failed", len(live))
+            self._fail_traces(live, str(err), self.clock.now())
             return
         t1 = self.clock.now()
+        padded = self.scheduler.padded_width(len(batch.requests),
+                                             batch.bucket)
         if self.scheduler.estimator is not None:
-            self.scheduler.estimator.observe(
-                batch.bucket,
-                self.scheduler.padded_width(len(batch.requests),
-                                            batch.bucket),
-                t1 - t0)
+            self.scheduler.estimator.observe(batch.bucket, padded, t1 - t0)
+        if self.feedback is not None and info and info.get("plan_key"):
+            # The measured half of ROADMAP item 5: the executed plan's
+            # per-operand seconds fold into the PlanFeedback EWMA the
+            # next warmup's choose_plan consults.
+            self.feedback.record(info["bucket_key"], info["plan_key"],
+                                 t1 - t0, batch=padded)
+        ledger_delta = []
+        if traced:
+            from repro.dist.collectives import LEDGER
+
+            before_counts, before_bytes = ledger_before
+            for kind in sorted(set(LEDGER.counts) | set(before_counts)):
+                n = LEDGER.counts.get(kind, 0) - before_counts.get(kind, 0)
+                nbytes = LEDGER.bytes.get(kind, 0.0) \
+                    - before_bytes.get(kind, 0.0)
+                if n > 0 or nbytes != 0.0:
+                    ledger_delta.append((kind, nbytes, n))
         for r, out in zip(batch.requests, outputs):
             if r.future.cancelled() or r.future.done():
                 continue
@@ -145,6 +191,7 @@ class RuntimeLoop:
             self.metrics.observe("wait_s", r.wait_s)
             self.metrics.observe("exec_s", r.exec_s)
             self.metrics.observe("e2e_s", r.prep_s + (t1 - r.arrival))
+            verdict = None
             if r.deadline is not None:
                 verdict = "slo_met" if t1 <= r.deadline else "slo_missed"
                 self.metrics.inc(verdict)
@@ -161,6 +208,47 @@ class RuntimeLoop:
                     r.prep_s + (t1 - r.arrival))
                 self.metrics.observe(
                     labeled("exec_s", servable=r.graph_key), r.exec_s)
+            if r.trace is not None:
+                self._trace_completion(r, batch, t0, t1, padded, info,
+                                       ledger_delta, verdict)
+
+    def _trace_completion(self, r: Request, batch: ClosedBatch,
+                          t0: float, t1: float, padded: int,
+                          info: Optional[dict], ledger_delta,
+                          verdict: Optional[str]) -> None:
+        """Stamp queue-wait / execute / per-layer spans and close the trace.
+
+        The queue-wait span is written retroactively (arrival -> batch
+        close, carrying the close reason); the execute span covers the
+        runner call and owns the batch's ledger byte-delta events plus
+        one ``execute_layer`` child per layer with the serving plan's
+        attributes.  All timestamps are exact clock readings the loop
+        already took, so traces are deterministic under ``VirtualClock``.
+        """
+        trace = r.trace
+        queue_wait = trace.span(
+            "queue_wait", start=r.arrival,
+            close_reason=batch.reason,
+            batch_size=len(batch.requests),
+            padded_batch=padded)
+        queue_wait.finish(at=batch.closed_at)
+        info = info or {}
+        execute = trace.span(
+            "execute", start=t0,
+            bucket_key=info.get("bucket_key"),
+            plan_key=info.get("plan_key"),
+            batch_size=len(batch.requests),
+            padded_batch=padded,
+            **info.get("attrs", {}))
+        for kind, nbytes, n in ledger_delta:
+            execute.event("ledger", at=t1, kind=kind, bytes=nbytes, n=n)
+        for i, layer_attrs in enumerate(info.get("layers", ())):
+            trace.span("execute_layer", parent=execute, start=t0,
+                       layer=i, **layer_attrs).finish(at=t1)
+        execute.finish(at=t1)
+        if verdict is not None:
+            trace.root.set(slo=verdict)
+        trace.finish(status="ok", at=t1)
 
     # ------------------------------------------------------------------
 
@@ -254,12 +342,19 @@ class ServeRuntime:
         close_margin_s: Optional[float] = None,
         calibration: float = 1.0,
         graph_key: Optional[str] = None,
+        tracer=None,
+        feedback=None,
     ):
         from repro.serve.registry import graph_key as graph_key_fn
 
         self.engine = engine
         self.clock = clock or RealClock()
         self.metrics = metrics or MetricsRegistry()
+        # repro.obs hookups, both optional: a Tracer makes every request
+        # yield one complete trace; a PlanFeedback store accumulates
+        # measured per-(bucket, plan) execute latency while serving.
+        self.tracer = tracer
+        self.feedback = feedback
         # The content hash is O(nnz); callers that build runtimes
         # repeatedly over one engine (the query_batch facade) pass the
         # key they already computed.
@@ -289,11 +384,33 @@ class ServeRuntime:
             max_wait_s=max_wait_s,
             close_margin_s=close_margin_s,
         )
-        self.loop = RuntimeLoop(self.scheduler, self._run_batch)
+        self.loop = RuntimeLoop(
+            self.scheduler, self._run_batch,
+            batch_info=(self._batch_info
+                        if (tracer is not None or feedback is not None)
+                        else None),
+            feedback=feedback,
+        )
 
     # ------------------------------------------------------------------
 
+    def _batch_info(self, batch: ClosedBatch) -> dict:
+        from repro.obs.trace import engine_batch_info
+
+        return engine_batch_info(self.engine, batch.bucket)
+
     def _run_batch(self, batch: ClosedBatch) -> List:
+        if self.tracer is not None:
+            # Ledger the batch's modeled DRAM traffic host-side: the AOT
+            # executables were traced long ago, so the per-dispatch
+            # records the eager path makes never fire here.  Gated on
+            # tracing so untraced serving leaves the global LEDGER
+            # exactly as before.
+            self.engine.batcher.record_batch_dram(
+                batch.bucket,
+                self.scheduler.padded_width(len(batch.requests),
+                                            batch.bucket),
+                int(self.engine.features.shape[1]))
         return self.engine.batcher.run(
             self.engine.params, [r.padded for r in batch.requests]
         )
@@ -318,15 +435,28 @@ class ServeRuntime:
             raise ValueError("pass deadline_s (relative) or deadline "
                              "(absolute), not both")
         t0 = self.clock.now()
+        key = graph_key if graph_key is not None else self.graph_key
+        abs_deadline = (t0 + deadline_s if deadline_s is not None
+                        else deadline)
+        trace = None
+        if self.tracer is not None:
+            trace = self.tracer.trace(
+                "request", graph_key=key, priority=priority,
+                deadline=abs_deadline, n_seeds=len(seeds))
         padded = self.engine._prepare(seeds)
+        t_prep = self.clock.now()
+        if trace is not None:
+            trace.span("prepare", start=t0,
+                       bucket=str(padded.bucket)).finish(at=t_prep)
         req = Request(
-            graph_key=graph_key if graph_key is not None else self.graph_key,
+            graph_key=key,
             seeds=tuple(int(s) for s in seeds),
-            deadline=(t0 + deadline_s if deadline_s is not None else deadline),
+            deadline=abs_deadline,
             priority=priority,
+            trace=trace,
             bucket=padded.bucket,
             padded=padded,
-            prep_s=self.clock.now() - t0,
+            prep_s=t_prep - t0,
         )
         self.queue.submit(req)
         self.loop.notify()

@@ -99,6 +99,7 @@ COUNTERS = (
     "rejected_unknown_servable",  # admission: graph_key routes nowhere
     "rejected_quota",       # admission: tenant token-bucket quota exhausted
     "rejected_inflight",    # admission: tenant concurrent-inflight cap hit
+    "rejected_acl",         # admission: tenant not allowed this method
     "shed_expired",         # queued, then deadline became unmeetable
     "cancelled",            # caller-cancelled while queued
     "completed",            # future resolved with a result
@@ -111,6 +112,16 @@ COUNTERS = (
 )
 
 
+#: Characters with structural meaning inside a labeled key; escaped in
+#: label values so distinct (name, labels) never collide on one key.
+_LABEL_ESCAPES = {"\\": "\\\\", ",": "\\,", "=": "\\=",
+                  "{": "\\{", "}": "\\}"}
+
+
+def _escape_label(value: object) -> str:
+    return "".join(_LABEL_ESCAPES.get(ch, ch) for ch in str(value))
+
+
 def labeled(name: str, **labels: str) -> str:
     """Metric key with attached labels, Prometheus-style.
 
@@ -121,12 +132,58 @@ def labeled(name: str, **labels: str) -> str:
     same registry and snapshot, so per-tenant/per-servable series need no
     second schema.  ``None``-valued labels are dropped, which lets call
     sites pass optional dimensions unconditionally.
+
+    Label values are backslash-escaped (``\\ , = { }``) so values
+    containing the separator characters can't collide on one key —
+    ``tenant="a,b=c"`` and ``tenant="a", extra="c"`` stay distinct —
+    and :func:`parse_labeled` can recover the exact (name, labels)
+    pair for exporters.
     """
     kept = {k: v for k, v in labels.items() if v is not None}
     if not kept:
         return name
-    inner = ",".join(f"{k}={kept[k]}" for k in sorted(kept))
+    inner = ",".join(f"{k}={_escape_label(kept[k])}" for k in sorted(kept))
     return f"{name}{{{inner}}}"
+
+
+def parse_labeled(key: str) -> tuple:
+    """Inverse of :func:`labeled`: ``key`` -> ``(name, labels_dict)``.
+
+    Plain (unlabeled) keys come back as ``(key, {})``.  Escaped
+    separator characters in label values are unescaped, so
+    ``parse_labeled(labeled(n, **ls)) == (n, ls)`` for any string
+    labels.
+    """
+    if not key.endswith("}"):
+        return key, {}
+    brace = key.find("{")
+    if brace < 0:
+        return key, {}
+    name, inner = key[:brace], key[brace + 1:-1]
+    labels: Dict[str, str] = {}
+    parts: List[str] = []
+    label_key = ""
+    in_value = False
+    escaped = False
+    for ch in inner:
+        if escaped:
+            parts.append(ch)
+            escaped = False
+        elif ch == "\\":
+            escaped = True
+        elif not in_value and ch == "=":
+            label_key = "".join(parts)
+            parts = []
+            in_value = True
+        elif in_value and ch == ",":
+            labels[label_key] = "".join(parts)
+            parts = []
+            in_value = False
+        else:
+            parts.append(ch)
+    if in_value:
+        labels[label_key] = "".join(parts)
+    return name, labels
 
 
 #: The counters that mean "offered but never produced a result" — the
@@ -137,6 +194,7 @@ _SHED_COUNTERS = (
     "rejected_unknown_servable",
     "rejected_quota",
     "rejected_inflight",
+    "rejected_acl",
     "shed_expired",
 )
 

@@ -84,6 +84,10 @@ class Request:
     # any back-pointer to the tenancy table.
     tenant: Optional[str] = None
 
+    # Optional repro.obs.Trace following this request (duck-typed so the
+    # runtime layer never imports obs; None = tracing off, zero cost).
+    trace: object = None
+
     # Filled at admission (the engine prepares/pads before submitting).
     bucket: object = None
     padded: object = None
@@ -283,23 +287,26 @@ class RequestQueue:
         self.metrics.inc("submitted")
         if request.bucket is None:
             raise ValueError("request must be prepared (bucket) before submit")
+        admission = None
+        if request.trace is not None:
+            admission = request.trace.span("admission", start=now)
         with self.lock:
             if self._closed:
                 return self._reject(
                     request, QueueClosedError("queue is closed"),
-                    "rejected_closed")
+                    "rejected_closed", admission, now)
             if self.key_check is not None and \
                     not self.key_check(request.graph_key):
                 return self._reject(
                     request, UnknownServableError(
                         f"graph_key {request.graph_key!r} matches no "
                         f"known servable"),
-                    "rejected_unknown_servable")
+                    "rejected_unknown_servable", admission, now)
             if self.capacity is not None and len(self) >= self.capacity:
                 return self._reject(
                     request, QueueFullError(
                         f"queue at capacity ({self.capacity})"),
-                    "rejected_queue_full")
+                    "rejected_queue_full", admission, now)
             if request.deadline is not None and self.estimator is not None:
                 est = self.estimator.estimate(request.bucket, 1)
                 if request.deadline - now < est:
@@ -309,19 +316,28 @@ class RequestQueue:
                             f"{max(request.deadline - now, 0.0):.6f}s "
                             f"< estimated exec {est:.6f}s for bucket "
                             f"{request.bucket}"),
-                        "rejected_infeasible")
+                        "rejected_infeasible", admission, now)
             request.arrival = now
             request.seq = next(self._seq)
             self._groups.setdefault(request.bucket, []).append(request)
             self.metrics.inc("admitted")
             self.metrics.set_gauge("queue_depth", len(self))
+            if admission is not None:
+                admission.set(verdict="admitted", queue_depth=len(self))
+                admission.finish(at=now)
         return request
 
     def _reject(self, request: Request, exc: AdmissionError,
-                counter: str) -> Request:
+                counter: str, admission=None,
+                now: Optional[float] = None) -> Request:
         self.metrics.inc(counter)
         if request.tenant is not None:
             self.metrics.inc(labeled(counter, tenant=request.tenant))
+        if admission is not None:
+            admission.set(verdict=counter)
+            admission.finish(at=now)
+        if request.trace is not None:
+            request.trace.finish(status=counter, at=now)
         request.future.set_exception(exc)
         raise exc
 
@@ -340,6 +356,9 @@ class RequestQueue:
                 del self._groups[request.bucket]
             self.metrics.inc("cancelled")
             self.metrics.set_gauge("queue_depth", len(self))
+            if request.trace is not None:
+                request.trace.finish(status="cancelled",
+                                     at=self.clock.now())
         return True
 
     def remove(self, requests: Sequence[Request]) -> None:

@@ -319,6 +319,10 @@ class BatchScheduler:
             self.metrics.inc("shed_expired")
             if r.tenant is not None:
                 self.metrics.inc(labeled("shed_expired", tenant=r.tenant))
+            if r.trace is not None:
+                r.trace.span("queue_wait", start=r.arrival,
+                             close_reason="shed_expired").finish(at=now)
+                r.trace.finish(status="shed_expired", at=now)
             if not r.future.done():
                 r.future.set_exception(DeadlineExceededError(
                     f"deadline {r.deadline:.6f} expired at {now:.6f}"))

@@ -153,12 +153,21 @@ class MicroBatcher:
         autoplan: bool = False,
         precision: str = "f32",
         fused: Optional[bool] = None,
+        feedback=None,
     ):
         self.cfg = cfg
         self.ladder = ladder
         self.max_batch = max_batch
         self.max_seeds = max_seeds
         self.interpret = interpret
+        # Optional repro.obs.feedback.PlanFeedback store: when set and
+        # ``autoplan`` is on, per-rung planning consults measured
+        # execute-latency EWMAs before the modeled DeviceModel costs
+        # (ROADMAP item 5's measured half).  Plan decisions stay pinned
+        # by the per-rung caches below, so feedback arriving *after* a
+        # rung warmed never triggers a recompile — it informs the next
+        # engine build instead.
+        self.feedback = feedback
         # Kernel fusion per layer: ``None`` leaves the decision to the
         # planner (``autoplan=True`` lets the pipeline DP fuse layers it
         # prices cheaper; otherwise plans run unfused as always), ``True``
@@ -230,6 +239,11 @@ class MicroBatcher:
                 ),
                 tau=self.cfg.tau,
             )
+            feedback_key = None
+            if self.feedback is not None:
+                from repro.obs.feedback import bucket_key
+
+                feedback_key = bucket_key(bucket, feature_dim)
             choice = choose_plan(
                 stats,
                 feature_dim,
@@ -237,6 +251,8 @@ class MicroBatcher:
                 impls=("reference", "pallas"),
                 interpret=self.interpret,
                 schedulable=False,
+                feedback=self.feedback,
+                feedback_key=feedback_key,
             )
             plan = choice.plan.resolve(schedulable=False)
             self._bucket_plans[key] = plan
@@ -269,6 +285,26 @@ class MicroBatcher:
             return plans
         key = (bucket, feature_dim)
         plans = self._layer_plans.get(key)
+        if plans is None and self.feedback is not None:
+            from repro.obs.feedback import bucket_key
+
+            if self.feedback.has_bucket(bucket_key(bucket, feature_dim)):
+                # Measured entries exist for this rung: serve every layer
+                # with the feedback-informed single-plan choice.  A
+                # measured EWMA prices the *whole* coalesced forward, so
+                # within one bucket key the measured comparison is only
+                # meaningful plan-vs-plan, not layer-vs-layer — the
+                # pipeline DP's per-layer modeled costs would silently
+                # override what was actually measured.
+                plan = self.plan_for_bucket(bucket, feature_dim)
+                plans = [plan] * self.cfg.n_layers
+                if self.fused is not None:
+                    plans = [
+                        dataclasses.replace(p, fused=self.fused)
+                        for p in plans
+                    ]
+                self._layer_plans[key] = plans
+                return plans
         if plans is None:
             from repro.exec.pipeline import plan_pipeline
             from repro.plan import cost
@@ -295,6 +331,44 @@ class MicroBatcher:
                 ]
             self._layer_plans[key] = plans
         return plans
+
+    def record_batch_dram(self, bucket: Bucket, batch: int,
+                          feature_dim: int) -> None:
+        """Ledger the modeled DRAM bytes of one coalesced forward.
+
+        The AOT executables were traced long ago, so the eager path's
+        per-dispatch ``record_spmm_dram`` never fires while serving;
+        this applies the same arithmetic host-side — one record per
+        layer over the coalesced block-diagonal operand at the rung's
+        precision and layer plans — so traced serving requests carry
+        ledgered-bytes span events.  Called by the runtimes only when
+        tracing is on, leaving the global ledger untouched otherwise.
+        """
+        from repro.exec.dispatch import record_spmm_dram
+        from repro.exec.fused import record_combination_dram
+
+        cfg = self.cfg
+        prec = self.precision_for_bucket(bucket)
+        plans = self.layer_plans_for_bucket(bucket, feature_dim)
+        if prec != "f32":
+            plans = [dataclasses.replace(p, precision=prec) for p in plans]
+        rows = int(batch) * bucket.rows
+        nodes = int(batch) * bucket.nodes
+        f_ins = [feature_dim] + [cfg.hidden_dim] * (cfg.n_layers - 1)
+        f_outs = [cfg.hidden_dim] * (cfg.n_layers - 1) + [cfg.out_dim]
+        for plan, f_in, f_out in zip(plans, f_ins, f_outs):
+            if plan.fused and plan.effective_impl != "reference":
+                # Same saved-writeback arithmetic the fused launch
+                # records eagerly: the intermediate activation's
+                # write + read-back (2 * K * F_out elements) never
+                # touches DRAM.
+                from repro.dist.collectives import LEDGER
+
+                ab = quant.activation_bytes(plan.precision)
+                LEDGER.record_fused_writeback(2.0 * nodes * f_out * ab)
+            else:
+                record_combination_dram(plan, nodes, f_in, f_out)
+            record_spmm_dram(plan, rows, cfg.tau, nodes, f_out, nodes)
 
     # ------------------------------------------------------------------
     # Request preparation

@@ -92,6 +92,7 @@ class ServeEngine:
         precision: str = "f32",
         accuracy_budget: float = 0.05,
         fused: Optional[bool] = None,
+        feedback=None,
     ):
         from repro.exec import quant
 
@@ -149,7 +150,13 @@ class ServeEngine:
             autoplan=autoplan,
             precision=self._static_precision,
             fused=fused,
+            feedback=feedback,
         )
+        # repro.obs.feedback.PlanFeedback (or None): measured per-rung
+        # execute latency consulted by autoplan warmup (through the
+        # batcher above) and recorded into by runtimes built from
+        # :meth:`runtime`.
+        self.feedback = feedback
         self.timings: Dict[str, List[float]] = {}
         self.seeds_served: Dict[str, int] = {}
         self.wall: Dict[str, float] = {}
@@ -346,9 +353,13 @@ class ServeEngine:
 
     def runtime(self, **kw) -> "ServeRuntime":
         """A fresh async runtime over this (ideally warmed) engine; see
-        :class:`repro.runtime.ServeRuntime` for the knobs."""
+        :class:`repro.runtime.ServeRuntime` for the knobs.  An engine
+        built with a ``feedback`` store hands it to every runtime (so
+        serving keeps feeding the EWMAs warmup consulted) unless the
+        caller overrides it here."""
         from repro.runtime import ServeRuntime
 
+        kw.setdefault("feedback", self.feedback)
         return ServeRuntime(self, **kw)
 
     def servable(self, key: Optional[str] = None, **kw) -> "GcnServable":

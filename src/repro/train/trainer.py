@@ -80,6 +80,7 @@ def run(
     failure_hook: Optional[Callable[[int], None]] = None,
     log: Callable[[str], None] = print,
     straggler_monitor: Optional[StragglerMonitor] = None,
+    metrics: Optional[Any] = None,
 ) -> Tuple[PyTree, TrainerReport]:
     """Run the loop; ``state`` is any pytree holding params + opt state.
 
@@ -95,6 +96,12 @@ def run(
     ``masked_psum_mean(grads, axis, alive[replica])``; reporting
     per-replica wall times under ``metrics["replica_step_times"]`` is
     what feeds the monitor's warn/drop verdicts.
+
+    ``metrics`` (a :class:`repro.runtime.metrics.MetricsRegistry`) is
+    handed to the monitor the loop constructs, which then publishes
+    per-replica ``straggler_step_ewma_s`` / ``straggler_alive`` gauges
+    on every observation.  Ignored when ``straggler_monitor`` is passed
+    explicitly — a pre-built monitor carries its own registry.
     """
     start_step = 0
     existing = ckpt.latest_step(cfg.ckpt_dir)
@@ -114,6 +121,7 @@ def run(
             warn_factor=cfg.straggler_warn_factor,
             drop_factor=cfg.straggler_drop_factor,
             patience=cfg.straggler_patience,
+            metrics=metrics,
         )
     dropped: List[int] = []
 
